@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks: Pallas (interpret) correctness-validated paths
+timed against the pure-jnp oracles at bench scale (CPU wall times are NOT
+TPU projections — the roofline table in §Roofline covers the TPU story)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gp import GPParams, matern52 as matern_oracle
+from repro.kernels.matern.ops import matern52 as matern_pallas
+from repro.models.chunked_attention import attention_chunked
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def main() -> List[str]:
+    rows = []
+    # GP kernel matrix at the paper's n=512 design size.
+    x = jax.random.normal(jax.random.key(0), (512, 2))
+    p = GPParams(jnp.zeros(2), jnp.zeros(()), jnp.zeros(()))
+    t_oracle = _time(jax.jit(lambda a: matern_oracle(a, a, p)), x)
+    rows.append(f"matern512_xla,{t_oracle:.0f},us_per_call")
+    t_pallas = _time(lambda a: matern_pallas(a, a, p), x)
+    rows.append(f"matern512_pallas_interpret,{t_pallas:.0f},us_per_call")
+
+    # Attention at small scale: chunked vs naive.
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 4, 1024, 64))
+    k = jax.random.normal(ks[1], (1, 4, 1024, 64))
+    v = jax.random.normal(ks[2], (1, 4, 1024, 64))
+    t_naive = _time(jax.jit(lambda q, k, v: attention_ref(q, k, v)), q, k, v)
+    rows.append(f"attn1k_naive_xla,{t_naive:.0f},us_per_call")
+    t_chunk = _time(jax.jit(lambda q, k, v: attention_chunked(q, k, v)), q, k, v)
+    rows.append(f"attn1k_chunked,{t_chunk:.0f},us_per_call")
+
+    # SWE step throughput (jnp reference path).
+    from repro.swe import TohokuScenario
+    from repro.swe.solver import SWEState, stable_dt, step
+
+    sc = TohokuScenario(nx=96, ny=96, t_end=600.0)
+    cfg, b = sc.cfg, sc.bathymetry()
+    h = jnp.maximum(-b, 0.0)
+    st = SWEState(h, jnp.zeros_like(h), jnp.zeros_like(h))
+    dt = stable_dt(cfg, float(h.max()))
+    stepj = jax.jit(lambda s: step(s, b, cfg, dt))
+    t_swe = _time(stepj, st)
+    rows.append(f"swe_step_96x96,{t_swe:.0f},us_per_call")
+    cells_per_s = 96 * 96 / (t_swe / 1e6)
+    rows.append(f"swe_throughput,{cells_per_s / 1e6:.2f},Mcell_steps_per_s")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

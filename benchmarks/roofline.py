@@ -1,0 +1,85 @@
+"""§Roofline table generator: reads results/dryrun/*.json into the
+per-(arch x shape x mesh) roofline table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(results_dir: str = RESULTS_DIR) -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_row(c: Dict) -> str:
+    if c["status"] == "skipped":
+        return (
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — | — | — | — | "
+            f"skipped: {c['reason'][:48]} |"
+        )
+    if c["status"] == "error":
+        return (
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — | — | — | — | "
+            f"ERROR: {c['error'][:48]} |"
+        )
+    r = c["roofline"]
+    m = c["memory"]
+    dom = r["dominant"].replace("_s", "")
+    frac = r["roofline_fraction"]
+    ufr = r["useful_flop_ratio"]
+    return (
+        f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+        f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+        f"{dom} | {frac:.3f} | {ufr:.2f} | "
+        f"{m['peak_bytes'] / 2**30:.1f} GiB{' ✗' if not m['fits'] else ''} |"
+    )
+
+
+HEADER = (
+    "| arch | shape | mesh | compute [s] | memory [s] | collective [s] | "
+    "dominant | roofline frac | useful-flop ratio | HBM/chip |\n"
+    "|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def table(cells: List[Dict], mesh: str = "single") -> str:
+    rows = [HEADER]
+    for c in cells:
+        if c.get("mesh") == mesh:
+            rows.append(fmt_row(c))
+    return "\n".join(rows)
+
+
+def summary_csv(cells: List[Dict]) -> List[str]:
+    out = []
+    for c in cells:
+        if c["status"] != "ok":
+            out.append(f"dryrun_{c['arch']}_{c['shape']}_{c['mesh']},{c['status']},status")
+            continue
+        r = c["roofline"]
+        out.append(
+            f"roofline_{c['arch']}_{c['shape']}_{c['mesh']},"
+            f"{r['roofline_fraction']:.4f},frac_dominant={r['dominant']}"
+        )
+    return out
+
+
+def main() -> List[str]:
+    cells = load_cells()
+    if not cells:
+        return ["roofline,SKIPPED (run repro.launch.dryrun first),status"]
+    return summary_csv(cells)
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print(table(cells, "single"))
+    print()
+    print(table(cells, "multi"))

@@ -1,0 +1,60 @@
+"""Benchmark harness (deliverable (d)) — one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--fast]``
+
+Prints ``name,value,unit`` CSV rows:
+  * bench_balancer  -> paper Fig. 8 (timeline) + Fig. 9 (idle times)
+  * bench_mlda      -> paper Table 1 (per-level counts / E / V)
+  * bench_kernels   -> kernel micro-bench (CPU wall; TPU story in §Roofline)
+  * bench_gp        -> GP surrogate accuracy/fit time (paper §6.1)
+  * roofline        -> per-cell roofline fractions from the dry-run JSONs
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="skip the MLDA PDE bench")
+    ap.add_argument(
+        "--only", default="", help="comma-separated subset (balancer,mlda,kernels,gp,roofline)"
+    )
+    args = ap.parse_args()
+
+    from benchmarks import bench_balancer, bench_gp, bench_kernels, bench_mlda, roofline
+
+    sections = {
+        "balancer": bench_balancer.main,
+        "kernels": bench_kernels.main,
+        "gp": bench_gp.main,
+        "mlda": bench_mlda.main,
+        "roofline": roofline.main,
+    }
+    if args.fast:
+        sections.pop("mlda")
+    if args.only:
+        keep = set(args.only.split(","))
+        sections = {k: v for k, v in sections.items() if k in keep}
+
+    print("name,value,unit")
+    failures = 0
+    for name, fn in sections.items():
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row, flush=True)
+            print(f"bench_{name}_wall,{time.time() - t0:.1f},s", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"bench_{name},FAILED,status", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Serve a small LM with the paper's load balancer dispatching batched
+requests of heterogeneous generation lengths (DESIGN.md §4: the balancer is
+model-agnostic — here its 'model hierarchy' is short vs long generations).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    raise SystemExit(
+        subprocess.call(
+            [
+                sys.executable, "-m", "repro.launch.serve",
+                "--arch", "qwen2-0.5b",
+                "--requests", "24",
+                "--servers", "2",
+            ]
+        )
+    )

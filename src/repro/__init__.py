@@ -1,0 +1,2 @@
+"""repro: the paper's UQ load-balancing system + multi-pod LM substrate."""
+__version__ = "1.0.0"

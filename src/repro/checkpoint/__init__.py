@@ -1,0 +1,3 @@
+from .checkpoint import AsyncCheckpointer, restore, save
+
+__all__ = ["AsyncCheckpointer", "restore", "save"]

@@ -1,0 +1,50 @@
+"""Assigned-architecture registry (``--arch <id>``)."""
+from __future__ import annotations
+
+from typing import Dict
+
+from .base import ArchConfig, MoEConfig, SSMConfig, ShapeConfig, SHAPES, shape_applicable
+from .granite_moe_3b_a800m import CONFIG as granite_moe_3b_a800m
+from .llava_next_mistral_7b import CONFIG as llava_next_mistral_7b
+from .mamba2_1_3b import CONFIG as mamba2_1_3b
+from .mixtral_8x22b import CONFIG as mixtral_8x22b
+from .nemotron_4_340b import CONFIG as nemotron_4_340b
+from .phi4_mini_3_8b import CONFIG as phi4_mini_3_8b
+from .qwen2_0_5b import CONFIG as qwen2_0_5b
+from .smollm_360m import CONFIG as smollm_360m
+from .whisper_large_v3 import CONFIG as whisper_large_v3
+from .zamba2_1_2b import CONFIG as zamba2_1_2b
+
+ARCHS: Dict[str, ArchConfig] = {
+    c.arch_id: c
+    for c in [
+        llava_next_mistral_7b,
+        qwen2_0_5b,
+        smollm_360m,
+        phi4_mini_3_8b,
+        nemotron_4_340b,
+        zamba2_1_2b,
+        mamba2_1_3b,
+        mixtral_8x22b,
+        granite_moe_3b_a800m,
+        whisper_large_v3,
+    ]
+}
+
+
+def get_arch(arch_id: str) -> ArchConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch '{arch_id}'; available: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+__all__ = [
+    "ARCHS",
+    "ArchConfig",
+    "MoEConfig",
+    "SHAPES",
+    "SSMConfig",
+    "ShapeConfig",
+    "get_arch",
+    "shape_applicable",
+]

@@ -1,0 +1,142 @@
+"""Architecture + shape configuration for the assigned model zoo."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden size
+    capacity_factor: float = 1.25
+    impl: str = "sparse"  # "sparse" (capacity dispatch) | "dense" (all experts)
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int
+    expand: int = 2
+    head_dim: int = 64
+    d_conv: int = 4
+    chunk: int = 128
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """One assigned architecture (configs/<id>.py instantiates these)."""
+
+    arch_id: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    qkv_bias: bool = False
+    mlp: str = "swiglu"  # swiglu | sqrelu | gelu
+    rope_theta: float = 10000.0
+    sliding_window: Optional[int] = None  # Mixtral SWA
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (zamba2): one *shared* attention block every k core blocks
+    shared_attn_every: Optional[int] = None
+    # encoder-decoder (whisper)
+    n_encoder_layers: int = 0
+    n_frames: int = 0  # encoder sequence length (precomputed frame embeds)
+    # vlm (llava): patch embeddings projected into the LM stream
+    n_patches: int = 0
+    d_vision: int = 0
+    # numerics / runtime
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    attn_impl: str = "chunked"  # "chunked" (portable flash) | "pallas" (TPU) | "xla" (naive oracle)
+    remat: bool = True
+    # notes for DESIGN.md provenance
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def is_decoder_only(self) -> bool:
+        return self.family in ("dense", "moe", "ssm", "hybrid", "vlm")
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this arch decode at 500k context? (DESIGN.md §4 skip rule)."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window is not None
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        kv_ratio = max(1, self.n_heads // max(self.n_kv_heads, 1))
+        heads = min(self.n_heads, 4)
+        kv = max(1, heads // min(kv_ratio, max(heads, 1))) if heads else 0
+        changes: Dict = dict(
+            n_layers=min(self.n_layers, 2 if self.shared_attn_every is None else 4),
+            d_model=64,
+            n_heads=heads,
+            n_kv_heads=kv,
+            head_dim=16,
+            d_ff=128,
+            vocab=256,
+            param_dtype="float32",
+            compute_dtype="float32",
+            remat=False,
+        )
+        if self.moe is not None:
+            changes["moe"] = replace(self.moe, n_experts=min(self.moe.n_experts, 4),
+                                     top_k=min(self.moe.top_k, 2), d_ff=64)
+        if self.ssm is not None:
+            changes["ssm"] = replace(self.ssm, d_state=16, head_dim=16, chunk=16)
+        if self.n_encoder_layers:
+            changes["n_encoder_layers"] = 2
+            changes["n_frames"] = 32
+        if self.n_patches:
+            changes["n_patches"] = 16
+            changes["d_vision"] = 32
+        if self.shared_attn_every is not None:
+            changes["shared_attn_every"] = 2
+        return replace(self, **changes)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned (input-shape x step-kind) cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def is_serve(self) -> bool:
+        return self.kind in ("prefill", "decode")
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """DESIGN.md §4 skip rules.  Returns (runs, reason-if-skipped)."""
+    if shape.name == "long_500k" and not arch.subquadratic:
+        return False, "long_500k needs sub-quadratic attention (pure full-attn arch)"
+    return True, ""

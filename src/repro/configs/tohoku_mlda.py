@@ -1,0 +1,56 @@
+"""The paper's own workload: 3-level MLDA Tōhoku tsunami inversion (§6).
+
+Not an LM arch — this config wires the UQ pipeline: scenario resolutions
+per level, GP training budget, sampler settings, and balancer pool layout.
+Scaled presets: 'paper' mirrors §6.1 ratios (runtimes span orders of
+magnitude); 'cpu' is the laptop-scale variant used by examples and tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+
+@dataclass(frozen=True)
+class MLDAWorkloadConfig:
+    name: str
+    # grid resolutions per level (level 0 is the GP surrogate)
+    coarse_grid: Tuple[int, int]
+    fine_grid: Tuple[int, int]
+    t_end_s: float
+    # GP surrogate (paper: 512 LHS points from the level-1 model)
+    gp_train_points: int
+    gp_opt_steps: int
+    # sampler
+    n_chains: int = 5  # paper: 5-element job array = 5 parallel chains
+    n_fine_samples: int = 150  # paper: 155 level-2 samples
+    subchain_lengths: Tuple[int, int] = (10, 5)
+    rw_step_km: float = 15.0
+    # balancer pool: servers per level (paper: shared pool, FCFS)
+    servers_per_level: Dict[int, int] = field(
+        default_factory=lambda: {0: 1, 1: 2, 2: 2}
+    )
+
+
+PAPER = MLDAWorkloadConfig(
+    name="paper",
+    coarse_grid=(96, 96),
+    fine_grid=(288, 288),
+    t_end_s=4 * 3600.0,
+    gp_train_points=512,
+    gp_opt_steps=200,
+)
+
+CPU = MLDAWorkloadConfig(
+    name="cpu",
+    coarse_grid=(32, 32),
+    fine_grid=(64, 64),
+    t_end_s=2 * 3600.0,
+    gp_train_points=128,
+    gp_opt_steps=150,
+    n_chains=3,
+    n_fine_samples=30,
+    subchain_lengths=(5, 3),
+)
+
+CONFIGS = {"paper": PAPER, "cpu": CPU}

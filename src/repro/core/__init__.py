@@ -1,0 +1,55 @@
+"""The paper's contribution: dynamic load balancing for UQ + MLDA sampling."""
+from .balancer import LoadBalancer, Request, Server, ServerDiedError
+from .diagnostics import (
+    effective_sample_size,
+    gelman_rubin,
+    summarize_chain,
+    telescoping_estimate,
+    variance_reduction_check,
+)
+from .gp import GaussianProcess, GPParams, fit_gp, matern52
+from .lhs import latin_hypercube, scale_to_bounds
+from .mh import (
+    AdaptiveMetropolis,
+    ChainStats,
+    GaussianRandomWalk,
+    PCNProposal,
+    Proposal,
+    metropolis_hastings,
+    mh_step,
+)
+from .mala import BalancedGradDensity, mala, mala_step
+from .mlda import BalancedDensity, MLDASampler, delayed_acceptance
+from .model import JaxModel, LogDensityModel, Model, ModelInfo
+
+__all__ = [
+    "AdaptiveMetropolis",
+    "BalancedDensity",
+    "ChainStats",
+    "GaussianProcess",
+    "GPParams",
+    "GaussianRandomWalk",
+    "JaxModel",
+    "LoadBalancer",
+    "LogDensityModel",
+    "MLDASampler",
+    "Model",
+    "ModelInfo",
+    "PCNProposal",
+    "Proposal",
+    "Request",
+    "Server",
+    "ServerDiedError",
+    "delayed_acceptance",
+    "effective_sample_size",
+    "fit_gp",
+    "gelman_rubin",
+    "latin_hypercube",
+    "matern52",
+    "metropolis_hastings",
+    "mh_step",
+    "scale_to_bounds",
+    "summarize_chain",
+    "telescoping_estimate",
+    "variance_reduction_check",
+]

@@ -1,0 +1,21 @@
+"""Latin hypercube sampling (paper §6.1: 512 LHS design points for the GP)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def latin_hypercube(key: jax.Array, n: int, d: int) -> jax.Array:
+    """n points in [0, 1]^d, one per stratum per dimension."""
+    k_perm, k_jit = jax.random.split(key)
+    perms = jnp.stack(
+        [jax.random.permutation(k, n) for k in jax.random.split(k_perm, d)], axis=1
+    )  # (n, d) stratum indices
+    jitter = jax.random.uniform(k_jit, (n, d))
+    return (perms + jitter) / n
+
+
+def scale_to_bounds(u: jax.Array, lo, hi) -> jax.Array:
+    lo = jnp.asarray(lo)
+    hi = jnp.asarray(hi)
+    return lo + u * (hi - lo)

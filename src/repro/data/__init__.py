@@ -1,0 +1,3 @@
+from .pipeline import batch_for, microbatch, synthetic_lm_batch
+
+__all__ = ["batch_for", "microbatch", "synthetic_lm_batch"]

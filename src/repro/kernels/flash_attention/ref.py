@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for (GQA, causal, optionally sliding-window) attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, H, S, D)
+    k: jnp.ndarray,  # (B, Hkv, S, D)
+    v: jnp.ndarray,  # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding-window size (Mixtral SWA)
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    sk = k.shape[2]
+    group = h // hkv
+    if scale is None:
+        scale = d**-0.5
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+    qi = jnp.arange(sq)[:, None]
+    ki = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = mask & (ki <= qi)
+    if window is not None:
+        mask = mask & (ki > qi - window)
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jnp.nan_to_num(jnp.exp(logits - logits.max(-1, keepdims=True)))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), vv)

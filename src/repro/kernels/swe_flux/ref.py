@@ -1,0 +1,6 @@
+"""Oracle for the SWE flux kernel = the pure-jnp solver step itself."""
+from __future__ import annotations
+
+from repro.swe.solver import SWEConfig, SWEState, step as swe_step_ref
+
+__all__ = ["SWEConfig", "SWEState", "swe_step_ref"]

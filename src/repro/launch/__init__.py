@@ -1,0 +1,1 @@
+"""Launch layer: mesh, dry-run, training and serving drivers."""

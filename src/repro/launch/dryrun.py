@@ -1,0 +1,284 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST run before any jax import (jax locks device count on first init).
+
+"""Multi-pod dry-run (deliverable (e)).
+
+For every (architecture x input-shape x mesh) cell:
+  lower -> compile -> memory_analysis + cost_analysis + collective census,
+all against ShapeDtypeStruct stand-ins (zero allocation).  Results land in
+``results/dryrun/<arch>__<shape>__<mesh>.json`` and feed §Dry-run/§Roofline
+of EXPERIMENTS.md via ``benchmarks/roofline.py``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, shape_applicable
+from repro.launch.mesh import (
+    HBM_PER_CHIP,
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    make_production_mesh,
+)
+from repro.runtime.sharding import choose_policy, make_policy
+from repro.runtime.train_loop import get_runtime, shard_train_step
+from repro.runtime.serve_loop import shard_decode_step, shard_prefill_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|f64|s64)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "f32": 4, "s32": 4, "u32": 4, "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def collective_census(hlo_text: str) -> Dict[str, float]:
+    """Sum per-device output bytes of every collective op in optimized HLO.
+
+    HLO lines look like ``%name = f32[16,128]{1,0} all-reduce(...)`` or the
+    async pair ``(..) all-gather-start(..)`` / ``all-gather-done``; we count
+    the start/plain form only and read the result shapes between '=' and
+    the op keyword.
+    """
+    out: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        rhs = ls.split("=", 1)[1]
+        hit = None
+        for op in _COLLECTIVES:
+            # avoid double counting the -done halves of async collectives
+            if f" {op}(" in rhs or f" {op}-start(" in rhs:
+                hit = op
+                break
+        if hit is None:
+            continue
+        head = rhs.split(f" {hit}", 1)[0]
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(head):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _BYTES[dt]
+        out[hit] += float(total)
+        out["count"] += 1
+    out["total_bytes"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def model_flops(arch_id: str, shape_name: str) -> float:
+    """6 * N_active * tokens (training) / 2 * N_active * tokens (inference)."""
+    from repro.models import abstract_params
+    from repro.models.lm import param_count
+
+    cfg = ARCHS[arch_id]
+    shape = SHAPES[shape_name]
+    params = abstract_params(cfg)
+    n_total = sum(int(x.size) for x in jax.tree.leaves(params))
+    n_active = n_total
+    if cfg.moe is not None:
+        # Subtract inactive expert params: (1 - top_k/E) of expert weights.
+        e, k = cfg.moe.n_experts, cfg.moe.top_k
+        expert_params = 3 * cfg.d_model * cfg.moe.d_ff * e * cfg.n_layers
+        n_active = n_total - expert_params * (1 - k / e)
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str, *, seq_parallel: bool = False,
+             fsdp: bool = True, layout: str = "auto", remat: bool = True) -> Dict:
+    import dataclasses
+
+    cfg = ARCHS[arch_id]
+    if not remat:
+        cfg = dataclasses.replace(cfg, remat=False)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    if layout == "auto":
+        policy = choose_policy(cfg, shape, mesh, seq_parallel=seq_parallel)
+    elif layout == "dp":
+        policy = make_policy(mesh, fsdp=fsdp, pure_dp=True)
+    else:  # "tp"
+        policy = make_policy(mesh, fsdp=fsdp, seq_parallel=seq_parallel)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            fn, abstract = shard_train_step(cfg, shape, policy)
+            lowered = fn.lower(*abstract)
+        elif shape.kind == "prefill":
+            fn, abstract = shard_prefill_step(cfg, shape, policy)
+            lowered = fn.lower(*abstract)
+        else:
+            fn, abstract = shard_decode_step(cfg, shape, policy)
+            lowered = fn.lower(*abstract)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    # cost_analysis counts while-loop (lax.scan) bodies once — useless for
+    # scan-over-layers models.  hlo_cost multiplies by trip counts.
+    from repro.launch.hlo_cost import analyze
+
+    summary = analyze(compiled.as_text())
+    census = {**summary.collectives, "count": summary.collective_count,
+              "total_bytes": summary.collective_bytes}
+
+    flops = float(summary.flops)
+    bytes_accessed = float(summary.bytes)
+    coll_bytes = float(summary.collective_bytes)
+    compute_term = flops / PEAK_FLOPS_BF16
+    memory_term = bytes_accessed / HBM_BW
+    collective_term = coll_bytes / ICI_BW
+    mf = model_flops(arch_id, shape_name) / n_chips
+    terms = {"compute_s": compute_term, "memory_s": memory_term, "collective_s": collective_term}
+    dominant = max(terms, key=terms.get)
+    # Pallas-deployment estimate: on TPU the flash kernel keeps attention
+    # tiles in VMEM — the chunked-XLA path's per-block score traffic
+    # (summary.attention_bytes) never reaches HBM.
+    memory_pallas = (bytes_accessed - float(summary.attention_bytes)) / HBM_BW
+    terms_pallas = {**terms, "memory_s": memory_pallas}
+    frac_pallas = (
+        (mf / PEAK_FLOPS_BF16) / max(terms_pallas.values())
+        if max(terms_pallas.values()) > 0
+        else None
+    )
+
+    result = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "n_chips": int(n_chips),
+        "status": "ok",
+        "seq_parallel": seq_parallel,
+        "fsdp": fsdp,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+            ),
+            "hbm_per_chip": HBM_PER_CHIP,
+            "fits": bool(
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+                < HBM_PER_CHIP
+            ),
+        },
+        "cost": {
+            "flops_per_device": flops,
+            "bytes_per_device": bytes_accessed,
+            "attention_bytes": float(summary.attention_bytes),
+            "attention_flops": float(summary.attention_flops),
+            "xla_cost_analysis_flops": float(cost.get("flops", 0.0)),
+            "xla_cost_analysis_bytes": float(cost.get("bytes accessed", 0.0)),
+        },
+        "collectives": census,
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "model_flops_per_device": mf,
+            "useful_flop_ratio": (mf / flops) if flops else None,
+            "roofline_fraction": (mf / PEAK_FLOPS_BF16) / max(terms.values())
+            if max(terms.values()) > 0
+            else None,
+            "memory_s_pallas": memory_pallas,
+            "roofline_fraction_pallas": frac_pallas,
+        },
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--layout", default="auto", choices=["auto", "dp", "tp"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                name = f"{a}__{s}__{m}{args.tag}.json"
+                path = os.path.join(args.out, name)
+                if os.path.exists(path) and args.all:
+                    print(f"[skip-existing] {name}")
+                    continue
+                print(f"[dryrun] {a} x {s} x {m} ...", flush=True)
+                try:
+                    res = run_cell(
+                        a, s, m,
+                        seq_parallel=args.seq_parallel,
+                        fsdp=not args.no_fsdp,
+                        layout=args.layout,
+                        remat=not args.no_remat,
+                    )
+                except Exception as exc:  # noqa: BLE001
+                    failures += 1
+                    res = {
+                        "arch": a, "shape": s, "mesh": m, "status": "error",
+                        "error": f"{type(exc).__name__}: {exc}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=2)
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    r = res["roofline"]
+                    extra = (
+                        f" dominant={r['dominant']} frac={r['roofline_fraction']:.3f}"
+                        f" mem={res['memory']['peak_bytes'] / 2**30:.2f}GiB"
+                        f" compile={res['compile_s']}s"
+                    )
+                elif status == "error":
+                    extra = " " + res["error"][:200]
+                print(f"[dryrun] {a} x {s} x {m}: {status}{extra}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

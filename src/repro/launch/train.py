@@ -1,0 +1,95 @@
+"""Training driver: ``python -m repro.launch.train --arch smollm-360m ...``
+
+Runs real steps on the local devices (examples/CI scale) with the same
+train_step factory the dry-run lowers for the production mesh: config
+system, data pipeline, AdamW, checkpoint/restart, failure handling.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import AsyncCheckpointer, restore, save
+from repro.configs import ARCHS, SHAPES
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import microbatch, synthetic_lm_batch
+from repro.launch.mesh import make_host_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.sharding import activation_sharding, make_policy
+from repro.runtime.train_loop import TrainRuntime, make_train_fns
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true", help="CPU-sized model")
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    shape = ShapeConfig("cli", seq_len=args.seq_len, global_batch=args.batch, kind="train")
+
+    rt = TrainRuntime(
+        microbatches=args.microbatches,
+        adamw=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                          total_steps=args.steps),
+    )
+    init_fn, train_step = make_train_fns(cfg, rt)
+
+    mesh = make_host_mesh()
+    policy = make_policy(mesh, pure_dp=True)
+
+    key = jax.random.key(0)
+    start_step = 0
+    params, opt_state = init_fn(key)
+    ckpt = AsyncCheckpointer()
+    if args.resume and args.checkpoint and os.path.exists(args.checkpoint):
+        (params, opt_state), start_step, _ = restore(
+            args.checkpoint, (params, opt_state)
+        )
+        print(f"[train] resumed from step {start_step}")
+
+    step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+    t0 = time.time()
+    tokens_per_step = args.batch * args.seq_len
+    with mesh:
+        with activation_sharding(policy):
+            for step in range(start_step, args.steps):
+                batch = synthetic_lm_batch(cfg, shape, step)
+                batch = microbatch(batch, args.microbatches)
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+                if (step + 1) % args.log_every == 0 or step == start_step:
+                    loss = float(metrics["loss"])
+                    dt = time.time() - t0
+                    tps = tokens_per_step * (step + 1 - start_step) / max(dt, 1e-9)
+                    print(
+                        f"[train] step {step + 1}/{args.steps} loss={loss:.4f} "
+                        f"lr={float(metrics['lr']):.2e} gnorm={float(metrics['grad_norm']):.2f} "
+                        f"tok/s={tps:,.0f}",
+                        flush=True,
+                    )
+                if args.checkpoint and (step + 1) % args.checkpoint_every == 0:
+                    ckpt.save(args.checkpoint, (params, opt_state), step=step + 1)
+    ckpt.wait()
+    if args.checkpoint:
+        save(args.checkpoint, (params, opt_state), step=args.steps)
+        print(f"[train] final checkpoint at {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Assigned-architecture model zoo (pure JAX, scan-over-layers)."""
+from .zoo import ModelBundle, abstract_decode_state, abstract_params, build_model, input_specs
+
+__all__ = [
+    "ModelBundle",
+    "abstract_decode_state",
+    "abstract_params",
+    "build_model",
+    "input_specs",
+]

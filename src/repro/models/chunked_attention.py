@@ -1,0 +1,108 @@
+"""Flash-style chunked attention in pure JAX (the portable hot path).
+
+The Pallas kernel (kernels/flash_attention) is the TPU implementation; this
+module is its algorithmic twin built from ``lax.scan`` + online softmax so
+that *every* backend (including the CPU dry-run and the XLA fallback on
+unaligned head counts) avoids materialising the (B, H, S, S) score matrix —
+at 32k tokens that matrix is ~128 GiB/head-batch and simply cannot exist.
+
+Structure: q stays a whole (B, H, S, D) tensor; only K/V are blocked and
+scanned with running (max, sum, acc) online-softmax state.  Keeping q
+un-blocked matters for distribution: the q sequence dim can then carry a
+plain PartitionSpec (context parallelism) without reshape/scan-axis
+interactions — blocking q was observed to make GSPMD fully rematerialise
+the operand every layer.  Peak memory per step is (B, H, S, block_k)
+scores, bounded by block_k.
+
+Sharding (runtime/sharding.py decides, this module cooperates):
+  * K/V are expanded to full head count with ``jnp.repeat`` so the head dim
+    survives; when H divides the model axis everything shards head-wise
+    with zero collectives (GSPMD materialises only the local shard of the
+    repeat);
+  * otherwise q is sharded along S (context parallelism) and K/V stay
+    replicated — online-softmax rows are independent, so the inner loop is
+    still collective-free.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_chunked(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,  # (B, Hkv, Skv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_k: int = 512,
+) -> jax.Array:
+    from repro.runtime.sharding import maybe_constrain_heads
+
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    s_kv = k.shape[2]
+    group = h // hkv
+    if scale is None:
+        scale = d**-0.5
+
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    k = maybe_constrain_heads(k, "kv")
+    v = maybe_constrain_heads(v, "kv")
+    q = maybe_constrain_heads(q, "q")
+
+    bk = min(block_k, s_kv)
+    pad_k = (-s_kv) % bk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nk = (s_kv + pad_k) // bk
+
+    kb = k.reshape(b, h, nk, bk, d).transpose(2, 0, 1, 3, 4)  # (nk, B, H, bk, D)
+    vb = v.reshape(b, h, nk, bk, d).transpose(2, 0, 1, 3, 4)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (s, 1), 0)  # absolute q index
+
+    def kv_block(st, kinp):
+        m_prev, l_prev, acc = st
+        ki, kblk, vblk = kinp
+        k_start = ki * bk
+        sc = jnp.einsum(
+            "bhqd,bhkd->bhqk", q, kblk, preferred_element_type=jnp.float32
+        ) * scale  # (B, H, S, bk)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        mask = cols < s_kv
+        if causal:
+            mask = mask & (cols <= rows)
+        if window is not None:
+            mask = mask & (cols > rows - window)
+        sc = jnp.where(mask[None, None], sc, NEG_INF)
+        m_cur = jnp.max(sc, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, h, s, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(kv_block, prevent_cse=False),
+        (m0, l0, a0),
+        (jnp.arange(nk), kb, vb),
+    )
+    safe = jnp.where(l > 0, l, 1.0)
+    return (acc / safe[..., None]).astype(q.dtype)

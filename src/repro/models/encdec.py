@@ -1,0 +1,184 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv1d+GELU mel frontend is a STUB per the assignment: ``input_specs``
+provides precomputed (B, n_frames, d_model) frame embeddings.  Positions are
+sinusoidal (shape-independent params, unlike Whisper's learned embeddings —
+noted in DESIGN.md §4).  Decoder blocks: causal self-attn -> cross-attn over
+the encoder output -> MLP.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .attention import (
+    KVCache,
+    attention_decode,
+    attention_train,
+    cross_attention,
+    encode_cross_kv,
+    init_attention,
+    init_kv_cache,
+)
+from .layers import (
+    Params,
+    cross_entropy_loss,
+    dense_init,
+    dtype_of,
+    embed_init,
+    init_mlp,
+    mlp,
+    rmsnorm,
+    unembed,
+)
+
+
+def sinusoidal_positions(seq: int, d: int, offset=0) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None] + offset
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return pe
+
+
+def _init_enc_block(key, cfg: ArchConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+    }
+
+
+def _init_dec_block(key, cfg: ArchConfig, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "self_attn": init_attention(k1, cfg, dtype),
+        "ln_x": jnp.ones((cfg.d_model,), dtype),
+        "cross_attn": init_attention(k2, cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    dtype = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.n_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "enc_blocks": jax.vmap(lambda k: _init_enc_block(k, cfg, dtype))(enc_keys),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(k, cfg, dtype))(dec_keys),
+        "embed": embed_init(ks[2], cfg.vocab, cfg.d_model, dtype),
+        "ln_enc": jnp.ones((cfg.d_model,), dtype),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def encode(params: Params, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, F, d) precomputed embeddings -> encoder output (B, F, d)."""
+    dt = dtype_of(cfg.compute_dtype)
+    x = frames.astype(dt) + sinusoidal_positions(frames.shape[1], cfg.d_model).astype(dt)
+
+    def body(x, p):
+        x = x + attention_train(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, causal=False)
+        x = x + mlp(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg.mlp)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rmsnorm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def decode_train(params: Params, cfg: ArchConfig, tokens: jax.Array, enc_out: jax.Array):
+    dt = dtype_of(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(dt)
+    x = x + sinusoidal_positions(tokens.shape[1], cfg.d_model).astype(dt)
+
+    def body(x, p):
+        x = x + attention_train(
+            p["self_attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, causal=True
+        )
+        kv = encode_cross_kv(p["cross_attn"], enc_out, cfg)
+        x = x + cross_attention(p["cross_attn"], rmsnorm(x, p["ln_x"], cfg.norm_eps), kv, cfg)
+        x = x + mlp(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg.mlp)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return unembed(x, params["embed"])
+
+
+def lm_loss(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    enc_out = encode(params, cfg, batch["frames"])
+    logits = decode_train(params, cfg, batch["tokens"], enc_out)
+    return cross_entropy_loss(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+class EncDecState(NamedTuple):
+    kv: KVCache  # decoder self-attn cache (L, B, H, W, hd)
+    cross_k: jax.Array  # (L, B, Hkv, F, hd)
+    cross_v: jax.Array
+    pos: jax.Array
+
+
+def init_decode_state(
+    params: Params, cfg: ArchConfig, frames: jax.Array, seq_len: int
+) -> EncDecState:
+    """Runs the encoder once and precomputes per-layer cross K/V."""
+    enc_out = encode(params, cfg, frames)
+
+    def per_layer(p):
+        return encode_cross_kv(p["cross_attn"], enc_out, cfg)
+
+    cross_k, cross_v = jax.vmap(per_layer)(params["dec_blocks"])
+    kv = init_kv_cache(cfg, frames.shape[0], seq_len, dtype_of(cfg.compute_dtype))
+    return EncDecState(kv=kv, cross_k=cross_k, cross_v=cross_v, pos=jnp.zeros((), jnp.int32))
+
+
+def decode_step(
+    params: Params, cfg: ArchConfig, state: EncDecState, tokens: jax.Array
+) -> Tuple[jax.Array, EncDecState]:
+    dt = dtype_of(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(dt)
+    x = x + sinusoidal_positions(1, cfg.d_model, offset=state.pos).astype(dt)
+    pos = state.pos
+
+    def body(carry, xs):
+        x, pos_buf = carry
+        p, k_c, v_c, ck, cv = xs
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        o, k_c, v_c, pos_buf = attention_decode(p["self_attn"], h, k_c, v_c, pos_buf, pos, cfg)
+        x = x + o
+        x = x + cross_attention(
+            p["cross_attn"], rmsnorm(x, p["ln_x"], cfg.norm_eps), (ck, cv), cfg
+        )
+        x = x + mlp(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg.mlp)
+        return (x, pos_buf), (k_c, v_c)
+
+    (x, pos_buf), (new_k, new_v) = jax.lax.scan(
+        body,
+        (x, state.kv.pos_buf),
+        (params["dec_blocks"], state.kv.k, state.kv.v, state.cross_k, state.cross_v),
+    )
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(x, params["embed"])
+    return logits, EncDecState(
+        kv=KVCache(k=new_k, v=new_v, pos_buf=pos_buf),
+        cross_k=state.cross_k,
+        cross_v=state.cross_v,
+        pos=pos + 1,
+    )

@@ -1,0 +1,137 @@
+"""Shared transformer primitives (pure-functional JAX, explicit pytrees)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+# -- init helpers ------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in**-0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# -- norms -------------------------------------------------------------------
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# -- rotary embeddings ---------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, S, D); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, D/2)
+    if ang.ndim == 2:  # (S, D/2) -> broadcast over B, H
+        ang = ang[None, None]
+    else:  # (B, S, D/2)
+        ang = ang[:, None]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# -- MLP variants --------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+            "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[1], d_ff, d_model, dtype),
+    }
+
+
+def _constrain_ffn(h: jax.Array) -> jax.Array:
+    """Pin the MLP hidden (B, S, ff) to ff->model: without this GSPMD was
+    observed to all-gather the full (d_model, d_ff) weights over BOTH mesh
+    axes (5.4 GB x 96 layers at nemotron scale) instead of keeping the
+    einsum f-sharded."""
+    from repro.runtime.sharding import _POLICY  # lazy: avoid import cycle
+    from jax.sharding import PartitionSpec as P
+
+    policy = _POLICY.get()
+    if policy is None or h.ndim != 3 or policy.model_axis is None:
+        return h
+    f_axis = policy.shard_if(h.shape[-1], policy.model_axis)
+    return jax.lax.with_sharding_constraint(
+        h, P(policy.batch_axes(h.shape[0]), None, f_axis)
+    )
+
+
+def mlp(params: Params, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["w_up"])
+        h = jax.nn.silu(g) * u
+    elif kind == "sqrelu":
+        h = jnp.einsum("...d,df->...f", x, params["w_up"])
+        h = jnp.square(jax.nn.relu(h))
+    elif kind == "gelu":
+        h = jnp.einsum("...d,df->...f", x, params["w_up"])
+        h = jax.nn.gelu(h)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    if h.ndim == 3:
+        h = _constrain_ffn(h)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def unembed(x: jax.Array, w_embed: jax.Array) -> jax.Array:
+    """Tied unembedding: (..., d) x (V, d) -> (..., V) in fp32."""
+    return jnp.einsum(
+        "...d,vd->...v", x.astype(jnp.float32), w_embed.astype(jnp.float32)
+    )
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token cross entropy; logits (B,S,V) fp32, labels (B,S).
+
+    The gold logit is extracted with a one-hot contraction, NOT
+    ``take_along_axis``: a gather along a model-sharded vocab dim forces
+    XLA to all-gather the full (B,S,V) fp32 logits (hundreds of GiB at 32k
+    seq); the iota-compare contraction fuses into a local reduction followed
+    by a scalar all-reduce instead.
+    """
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(shifted * onehot, axis=-1) + m[..., 0]
+    return jnp.mean(logz - gold)

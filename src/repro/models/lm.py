@@ -1,0 +1,399 @@
+"""Decoder-only LM assembly for all decoder families (dense/moe/ssm/hybrid/vlm).
+
+Layers are *stacked* and driven by ``lax.scan`` so the compiled HLO is O(1)
+in depth (critical for the 96-layer 340B dry-run), with an optional
+``jax.checkpoint`` (remat) policy around the block body.
+
+Hybrid (zamba2) structure: the layer stack is reshaped into
+``n_groups = n_layers // shared_attn_every`` groups; after each group the
+single *shared* (parameter-tied) attention+MLP block runs — scan over groups,
+scan over in-group Mamba layers, shared params in the carry closure.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .attention import (
+    KVCache,
+    attention_decode,
+    attention_train,
+    init_attention,
+    init_kv_cache,
+)
+from .layers import (
+    Params,
+    cross_entropy_loss,
+    dense_init,
+    dtype_of,
+    embed_init,
+    init_mlp,
+    mlp,
+    rmsnorm,
+    unembed,
+)
+from .moe import aux_load_balance_loss, init_moe, moe_ffn
+from .ssm import init_mamba, mamba_block, mamba_decode_step
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+def _init_attn_mlp_block(key, cfg: ArchConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+    return p
+
+
+def _init_mamba_block(key, cfg: ArchConfig, dtype) -> Params:
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "mamba": init_mamba(key, cfg, dtype),
+    }
+
+
+def _apply_attn_mlp_block(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    x = x + attention_train(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        return x + moe_ffn(p["moe"], h, cfg.moe)
+    return x + mlp(p["mlp"], h, cfg.mlp)
+
+
+def _apply_mamba_block(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    return x + mamba_block(p["mamba"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg)
+
+
+def _block_kind(cfg: ArchConfig) -> str:
+    return "mamba" if cfg.family in ("ssm", "hybrid") else "attn"
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ArchConfig) -> Params:
+    dtype = dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    n = cfg.n_layers
+
+    if _block_kind(cfg) == "mamba":
+        block_init = lambda k: _init_mamba_block(k, cfg, dtype)
+    else:
+        block_init = lambda k: _init_attn_mlp_block(k, cfg, dtype)
+
+    if cfg.shared_attn_every:  # hybrid: grouped stack + remainder + shared
+        every = cfg.shared_attn_every
+        n_groups, rem = divmod(n, every)
+        gkeys = jax.random.split(keys[0], n_groups * every).reshape(n_groups, every)
+        blocks = jax.vmap(jax.vmap(block_init))(gkeys)
+        params: Params = {"blocks": blocks}
+        if rem:
+            rkeys = jax.random.split(keys[1], rem)
+            params["blocks_tail"] = jax.vmap(block_init)(rkeys)
+        # Zamba2's shared attention block is full-width MHA + MLP.
+        shared_cfg = cfg
+        params["shared"] = _init_attn_mlp_block(keys[2], shared_cfg, dtype)
+    else:
+        bkeys = jax.random.split(keys[0], n)
+        params = {"blocks": jax.vmap(block_init)(bkeys)}
+
+    params["embed"] = embed_init(keys[3], cfg.vocab, cfg.d_model, dtype)
+    params["ln_f"] = jnp.ones((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[4], cfg.d_model, cfg.vocab, dtype)
+    if cfg.family == "vlm":
+        k5, k6 = jax.random.split(keys[5])
+        params["projector"] = {
+            "w1": dense_init(k5, cfg.d_vision, cfg.d_model, dtype),
+            "w2": dense_init(k6, cfg.d_model, cfg.d_model, dtype),
+        }
+    return params
+
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+def _embed_inputs(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]):
+    """tokens and/or patch embeddings -> (B, S, d) stream."""
+    parts = []
+    if cfg.family == "vlm" and "patches" in batch:
+        pr = params["projector"]
+        pe = jnp.einsum("bpv,vd->bpd", batch["patches"].astype(pr["w1"].dtype), pr["w1"])
+        pe = jnp.einsum("bpd,de->bpe", jax.nn.gelu(pe), pr["w2"])
+        parts.append(pe)
+    if "tokens" in batch:
+        parts.append(params["embed"][batch["tokens"]])
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    return x.astype(dtype_of(cfg.compute_dtype))
+
+
+def _scan_blocks(params: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    from repro.runtime.sharding import maybe_constrain  # avoid cycle at import
+
+    kind = _block_kind(cfg)
+    apply_one = _apply_mamba_block if kind == "mamba" else _apply_attn_mlp_block
+
+    def body(x, layer_params):
+        # Sequence-parallel residual stream (active only under the policy's
+        # activation_sharding context; no-op otherwise).
+        return maybe_constrain(apply_one(layer_params, x, cfg)), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if cfg.shared_attn_every:
+        shared = params["shared"]
+
+        def group_body(x, group_params):
+            x, _ = jax.lax.scan(body, x, group_params)
+            x = _apply_attn_mlp_block(shared, x, cfg)  # parameter-tied
+            return x, None
+
+        if cfg.remat:
+            group_body = jax.checkpoint(group_body, prevent_cse=False)
+        x, _ = jax.lax.scan(group_body, x, params["blocks"])
+        if "blocks_tail" in params:
+            x, _ = jax.lax.scan(body, x, params["blocks_tail"])
+        return x
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return x
+
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    """-> logits (B, S_total, V) in fp32."""
+    from repro.runtime.sharding import maybe_constrain, maybe_constrain_logits
+
+    x = maybe_constrain(_embed_inputs(params, cfg, batch))
+    x = _scan_blocks(params, x, cfg)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(x, params["embed"])
+    else:
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x.astype(jnp.float32), params["unembed"].astype(jnp.float32)
+        )
+    return maybe_constrain_logits(logits)
+
+
+def lm_loss(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    logits = forward(params, cfg, batch)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # vlm: patches carry no labels
+        logits = logits[:, logits.shape[1] - labels.shape[1] :]
+    loss = cross_entropy_loss(logits, labels)
+    if cfg.family == "moe":
+        # Mean aux loss over layers, weight 0.01 (Switch default order).
+        def aux(layer_params, x):
+            return aux_load_balance_loss(layer_params["moe"], x, cfg.moe)
+
+        # One-layer proxy on the embeddings (full per-layer aux would need
+        # activations; this keeps the router trained without a second scan).
+        x = _embed_inputs(params, cfg, batch)
+        first = jax.tree.map(lambda a: a[0], params["blocks"])
+        loss = loss + 0.01 * aux(first, x)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+class DecodeState(NamedTuple):
+    """Everything serve_step carries between tokens."""
+
+    kv: Optional[KVCache]  # attention caches (None for pure ssm)
+    ssm_h: Optional[jax.Array]  # (L, B, H, P, N)
+    ssm_conv: Optional[jax.Array]  # (L, B, K-1, conv_dim)
+    pos: jax.Array  # scalar int32
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, seq_len: int) -> DecodeState:
+    dtype = dtype_of(cfg.compute_dtype)
+    kv = None
+    ssm_h = ssm_conv = None
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv = init_kv_cache(cfg, batch, seq_len, dtype)
+    elif cfg.family == "ssm":
+        ssm = cfg.ssm
+        di = ssm.d_inner(cfg.d_model)
+        ssm_h = jnp.zeros(
+            (cfg.n_layers, batch, ssm.n_heads(cfg.d_model), ssm.head_dim, ssm.d_state),
+            jnp.float32,
+        )
+        ssm_conv = jnp.zeros(
+            (cfg.n_layers, batch, ssm.d_conv - 1, di + 2 * ssm.d_state), dtype
+        )
+    elif cfg.family == "hybrid":
+        ssm = cfg.ssm
+        di = ssm.d_inner(cfg.d_model)
+        n_inv = cfg.n_layers // cfg.shared_attn_every
+        w = min(seq_len, cfg.sliding_window or seq_len)
+        kv = KVCache(
+            k=jnp.zeros((n_inv, batch, cfg.n_kv_heads, w, cfg.hd), dtype),
+            v=jnp.zeros((n_inv, batch, cfg.n_kv_heads, w, cfg.hd), dtype),
+            pos_buf=jnp.full((w,), -1, jnp.int32),
+        )
+        ssm_h = jnp.zeros(
+            (cfg.n_layers, batch, ssm.n_heads(cfg.d_model), ssm.head_dim, ssm.d_state),
+            jnp.float32,
+        )
+        ssm_conv = jnp.zeros(
+            (cfg.n_layers, batch, ssm.d_conv - 1, di + 2 * ssm.d_state), dtype
+        )
+    return DecodeState(kv=kv, ssm_h=ssm_h, ssm_conv=ssm_conv, pos=jnp.zeros((), jnp.int32))
+
+
+def _shared_block_decode(shared: Params, x, kv_k, kv_v, pos_buf, pos, cfg):
+    h = rmsnorm(x, shared["ln1"], cfg.norm_eps)
+    o, kv_k, kv_v, pos_buf = attention_decode(
+        shared["attn"], h, kv_k, kv_v, pos_buf, pos, cfg
+    )
+    x = x + o
+    h = rmsnorm(x, shared["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        x = x + moe_ffn(shared["moe"], h, cfg.moe)
+    else:
+        x = x + mlp(shared["mlp"], h, cfg.mlp)
+    return x, kv_k, kv_v, pos_buf
+
+
+def decode_step(
+    params: Params,
+    cfg: ArchConfig,
+    state: DecodeState,
+    tokens: jax.Array,  # (B, 1)
+) -> Tuple[jax.Array, DecodeState]:
+    """One token for every sequence in the batch -> (logits (B,1,V), state)."""
+    x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+    pos = state.pos
+    kv = state.kv
+
+    if cfg.family in ("dense", "moe", "vlm"):
+
+        def body(carry, xs):
+            x, pos_buf = carry
+            layer_params, k_c, v_c = xs
+            h = rmsnorm(x, layer_params["ln1"], cfg.norm_eps)
+            o, k_c, v_c, pos_buf = attention_decode(
+                layer_params["attn"], h, k_c, v_c, pos_buf, pos, cfg
+            )
+            x = x + o
+            h = rmsnorm(x, layer_params["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                x = x + moe_ffn(layer_params["moe"], h, cfg.moe)
+            else:
+                x = x + mlp(layer_params["mlp"], h, cfg.mlp)
+            return (x, pos_buf), (k_c, v_c)
+
+        (x, pos_buf), (new_k, new_v) = jax.lax.scan(
+            body, (x, kv.pos_buf), (params["blocks"], kv.k, kv.v)
+        )
+        new_kv = KVCache(k=new_k, v=new_v, pos_buf=pos_buf)
+        new_state = DecodeState(kv=new_kv, ssm_h=None, ssm_conv=None, pos=pos + 1)
+
+    elif cfg.family == "ssm":
+
+        def body(x, xs):
+            layer_params, h_c, conv_c = xs
+            h = rmsnorm(x, layer_params["ln1"], cfg.norm_eps)
+            o, h_c, conv_c = mamba_decode_step(
+                layer_params["mamba"], h, h_c, conv_c, cfg
+            )
+            return x + o, (h_c, conv_c)
+
+        x, (new_h, new_conv) = jax.lax.scan(
+            body, x, (params["blocks"], state.ssm_h, state.ssm_conv)
+        )
+        new_state = DecodeState(kv=None, ssm_h=new_h, ssm_conv=new_conv, pos=pos + 1)
+
+    elif cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        n_groups, rem = divmod(cfg.n_layers, every)
+        shared = params["shared"]
+        g_h = state.ssm_h[: n_groups * every].reshape(
+            n_groups, every, *state.ssm_h.shape[1:]
+        )
+        g_conv = state.ssm_conv[: n_groups * every].reshape(
+            n_groups, every, *state.ssm_conv.shape[1:]
+        )
+
+        def mamba_body(x, xs):
+            layer_params, h_c, conv_c = xs
+            h = rmsnorm(x, layer_params["ln1"], cfg.norm_eps)
+            o, h_c, conv_c = mamba_decode_step(
+                layer_params["mamba"], h, h_c, conv_c, cfg
+            )
+            return x + o, (h_c, conv_c)
+
+        def group_body(carry, xs):
+            x, pos_buf = carry
+            group_params, h_g, conv_g, k_c, v_c = xs
+            x, (h_g, conv_g) = jax.lax.scan(mamba_body, x, (group_params, h_g, conv_g))
+            x, k_c, v_c, pos_buf = _shared_block_decode(
+                shared, x, k_c, v_c, pos_buf, pos, cfg
+            )
+            return (x, pos_buf), (h_g, conv_g, k_c, v_c)
+
+        (x, pos_buf), (new_gh, new_gconv, new_k, new_v) = jax.lax.scan(
+            group_body,
+            (x, kv.pos_buf),
+            (params["blocks"], g_h, g_conv, kv.k, kv.v),
+        )
+        new_h = new_gh.reshape(-1, *state.ssm_h.shape[1:])
+        new_conv = new_gconv.reshape(-1, *state.ssm_conv.shape[1:])
+        if rem:
+            tail_h = state.ssm_h[n_groups * every :]
+            tail_conv = state.ssm_conv[n_groups * every :]
+            x, (th, tc) = jax.lax.scan(
+                mamba_body, x, (params["blocks_tail"], tail_h, tail_conv)
+            )
+            new_h = jnp.concatenate([new_h, th], axis=0)
+            new_conv = jnp.concatenate([new_conv, tc], axis=0)
+        new_state = DecodeState(
+            kv=KVCache(k=new_k, v=new_v, pos_buf=pos_buf),
+            ssm_h=new_h,
+            ssm_conv=new_conv,
+            pos=pos + 1,
+        )
+    else:  # pragma: no cover
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(x, params["embed"])
+    else:
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x.astype(jnp.float32), params["unembed"].astype(jnp.float32)
+        )
+    return logits, new_state
+
+
+def prefill(
+    params: Params,
+    cfg: ArchConfig,
+    batch: Dict[str, jax.Array],
+) -> jax.Array:
+    """Full-sequence forward for the prefill shapes -> last-position logits.
+
+    (Serving cells lower this for `prefill_32k`; cache construction on TPU
+    shares the same computation, so logits are the representative output.)
+    """
+    logits = forward(params, cfg, batch)
+    return logits[:, -1:, :]

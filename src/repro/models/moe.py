@@ -1,0 +1,156 @@
+"""Mixture-of-Experts FFN: capacity-based sparse dispatch (default) + dense.
+
+The sparse path is the TPU-native formulation: static-shape sort-based
+dispatch into (E, C, d) expert blocks (no (N, E, C) one-hots — at 32k tokens
+those are multi-GiB), grouped-einsum expert compute, scatter-add combine.
+Expert and hidden dims carry sharding-friendly axes (see runtime/sharding).
+
+The dense path computes every expert for every token and weights by the
+router — simple, exact (no capacity drops), and the oracle for the sparse
+path in tests.  It is also the §Perf baseline whose compute-term is
+n_experts/top_k larger; the hillclimb switches it to sparse dispatch.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+
+from .layers import Params, dense_init
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> Params:
+    moe = cfg.moe
+    assert moe is not None
+    ks = jax.random.split(key, 4)
+    e, d, f = moe.n_experts, cfg.d_model, moe.d_ff
+    return {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # router in fp32
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * d**-0.5).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * d**-0.5).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32) * f**-0.5).astype(dtype),
+    }
+
+
+def _expert_ffn(params: Params, xs: jax.Array) -> jax.Array:
+    """xs: (E, C, d) -> (E, C, d) per-expert SwiGLU via grouped einsum."""
+    g = jnp.einsum("ecd,edf->ecf", xs, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xs, params["w_up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+
+def _router_topk(params: Params, x2: jax.Array, moe: MoEConfig):
+    """x2: (N, d) -> (weights (N,k), experts (N,k)); softmax over top-k."""
+    logits = jnp.einsum("nd,de->ne", x2.astype(jnp.float32), params["router"])
+    top_vals, top_idx = jax.lax.top_k(logits, moe.top_k)
+    weights = jax.nn.softmax(top_vals, axis=-1)  # Mixtral-style renormalise
+    return weights, top_idx
+
+
+def _capacity(moe: MoEConfig, n: int) -> int:
+    cap = int(moe.capacity_factor * n * moe.top_k / moe.n_experts)
+    return max(8, -(-cap // 8) * 8)  # MXU-aligned
+
+
+def _dispatch_row(params: Params, x2: jax.Array, moe: MoEConfig, cap: int):
+    """Routing for ONE sequence: x2 (S, d) -> dispatched (E*C+1, d) + combine info.
+
+    Dispatch is per-sequence (vmapped over batch) so the sort/gather/scatter
+    never crosses batch shards — a *global* sort forces GSPMD to replicate
+    all (B*S*k) routing tensors (observed: +150 GiB/device at 1M tokens).
+    Per-group token dropping is the standard EP formulation anyway.
+    """
+    n, d = x2.shape
+    k = moe.top_k
+    e = moe.n_experts
+    weights, experts = _router_topk(params, x2, moe)  # (S, k)
+
+    nk = n * k
+    flat_expert = experts.reshape(nk)
+    flat_weight = weights.reshape(nk)
+    flat_token = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+
+    # Stable sort groups the (token, expert) pairs by expert id.
+    order = jnp.argsort(flat_expert, stable=True)
+    se = flat_expert[order]
+    # Rank within the expert group = index - start-of-group.
+    start = jnp.searchsorted(se, se, side="left")
+    rank = jnp.arange(nk, dtype=jnp.int32) - start.astype(jnp.int32)
+    keep = rank < cap
+    slot = jnp.where(keep, se.astype(jnp.int32) * cap + rank, 0)
+    # Dropped entries scatter-ADD zeros into slot 0 (collision-safe: live
+    # slots are unique, dropped values are masked to 0).  Keeping the array
+    # at exactly (E*cap, d) — no '+1 drop row' — lets the capacity dim shard
+    # on the model axis (E*cap + 1 is odd and blocks any sharding).
+    src = x2[flat_token[order]] * keep[:, None].astype(x2.dtype)
+    xs = jnp.zeros((e * cap, d), x2.dtype).at[slot].add(src)
+    info = (slot, keep, flat_token[order], (flat_weight[order] * keep).astype(x2.dtype))
+    return xs, info
+
+
+def _combine_row(ys: jax.Array, info, n: int, cap: int, e: int) -> jax.Array:
+    slot, keep, token, weight = info
+    contrib = ys[slot] * weight[:, None]  # weight already 0 for dropped
+    return jnp.zeros((n, ys.shape[-1]), ys.dtype).at[token].add(contrib)
+
+
+def moe_ffn_sparse(params: Params, x: jax.Array, moe: MoEConfig) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d) with per-sequence capacity dropping.
+
+    Expert compute runs batched as (B, E, C, d) grouped einsums with
+    explicit batch->dp / expert->model sharding constraints (propagation
+    through vmapped scatter/gather loses the batch sharding otherwise).
+    """
+    from repro.runtime.sharding import maybe_constrain_moe
+
+    b, s, d = x.shape
+    e = moe.n_experts
+    cap = _capacity(moe, s)
+    xs, info = jax.vmap(lambda row: _dispatch_row(params, row, moe, cap))(x)
+    xs4 = maybe_constrain_moe(xs.reshape(b, e, cap, d))
+    g = jnp.einsum("becd,edf->becf", xs4, params["w_gate"])
+    u = jnp.einsum("becd,edf->becf", xs4, params["w_up"])
+    h = jax.nn.silu(g) * u
+    ys4 = maybe_constrain_moe(jnp.einsum("becf,efd->becd", h, params["w_down"]))
+    ys = ys4.reshape(b, e * cap, d)
+    out = jax.vmap(lambda y, i: _combine_row(y, i, s, cap, e))(ys, info)
+    return out.reshape(b, s, d)
+
+
+def moe_ffn_dense(params: Params, x: jax.Array, moe: MoEConfig) -> jax.Array:
+    """All-experts compute, router-weighted (oracle / §Perf baseline)."""
+    b, s, d = x.shape
+    n = b * s
+    x2 = x.reshape(n, d)
+    weights, experts = _router_topk(params, x2, moe)  # (N, k)
+    # Scatter top-k weights into a dense (N, E) matrix.
+    dense_w = jnp.zeros((n, moe.n_experts), jnp.float32)
+    dense_w = dense_w.at[jnp.arange(n)[:, None], experts].set(weights)
+    g = jnp.einsum("nd,edf->nef", x2, params["w_gate"])
+    u = jnp.einsum("nd,edf->nef", x2, params["w_up"])
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("nef,efd->ned", h, params["w_down"])
+    out = jnp.einsum("ned,ne->nd", y.astype(jnp.float32), dense_w)
+    return out.astype(x.dtype).reshape(b, s, d)
+
+
+def moe_ffn(params: Params, x: jax.Array, moe: MoEConfig) -> jax.Array:
+    if moe.impl == "dense":
+        return moe_ffn_dense(params, x, moe)
+    return moe_ffn_sparse(params, x, moe)
+
+
+def aux_load_balance_loss(params: Params, x: jax.Array, moe: MoEConfig) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (mean fraction * prob)."""
+    b, s, d = x.shape
+    x2 = x.reshape(-1, d)
+    logits = jnp.einsum("nd,de->ne", x2.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, top_idx = jax.lax.top_k(logits, moe.top_k)
+    counts = jnp.zeros((moe.n_experts,), jnp.float32).at[top_idx.reshape(-1)].add(1.0)
+    frac = counts / counts.sum()
+    return moe.n_experts * jnp.sum(frac * probs.mean(0))

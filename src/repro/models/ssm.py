@@ -1,0 +1,213 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked for TPU.
+
+Implements the scalar-A-per-head SSD form of arXiv:2405.21060:
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t (B_t ⊗ x_t)
+    y_t = C_t · h_t + D x_t
+
+The chunked algorithm splits the sequence into Q-token chunks: within-chunk
+terms become an attention-like (Q, Q) masked matmul (MXU work), and the
+inter-chunk recurrence is a ``lax.scan`` over chunk states (H, P, N) — the
+standard TPU-friendly decomposition (quadratic only in the chunk size).
+``ssd_naive`` is the oracle recurrence used by the tests.
+
+Decode carries the (H, P, N) state exactly — O(1) per token, which is what
+makes the ``long_500k`` cell tractable for SSM/hybrid archs (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+
+from .layers import Params, dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+def ssd_naive(x, dt, A, B, C, D):
+    """Oracle recurrence.  x: (L,H,P), dt: (L,H), A: (H,), B/C: (L,N), D: (H,).
+
+    Single group (G=1) — B and C are shared across heads.
+    """
+    l, h, p = x.shape
+    n = B.shape[-1]
+
+    def step(hstate, inputs):
+        xt, dtt, bt, ct = inputs
+        decay = jnp.exp(dtt * A)  # (H,)
+        upd = dtt[:, None, None] * (xt[:, :, None] * bt[None, None, :])
+        hstate = decay[:, None, None] * hstate + upd
+        yt = jnp.einsum("hpn,n->hp", hstate, ct)
+        return hstate, yt
+
+    h0 = jnp.zeros((h, p, n), x.dtype)
+    _, ys = jax.lax.scan(step, h0, (x, dt, B, C))
+    return ys + D[None, :, None] * x
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int):
+    """Chunked SSD.  Shapes as :func:`ssd_naive`; L % chunk == 0 (padded by
+    caller).  Returns (L, H, P)."""
+    l, h, p = x.shape
+    n = B.shape[-1]
+    q = chunk
+    nc = l // q
+
+    xq = x.reshape(nc, q, h, p)
+    dtq = dt.reshape(nc, q, h)
+    Bq = B.reshape(nc, q, n)
+    Cq = C.reshape(nc, q, n)
+
+    a = dtq * A  # (nc, q, h) log-decay per step
+    cum = jnp.cumsum(a, axis=1)  # (nc, q, h) log decay from chunk start
+
+    # Within-chunk: scores[i, j] = C_i·B_j * exp(cum_i - cum_j) * dt_j, j <= i
+    # log L matrix (nc, q, q, h):
+    seg = cum[:, :, None, :] - cum[:, None, :, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    # Double-where: masked (upper-triangle) entries have seg > 0 and exp(seg)
+    # overflows; inf * 0 in the cotangent NaNs the whole backward pass.
+    seg = jnp.where(mask[None, :, :, None], seg, 0.0)
+    decay = jnp.where(mask[None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("cin,cjn->cij", Cq, Bq)  # (nc, q, q)
+    scores = cb[..., None] * decay * dtq[:, None, :, :]  # (nc, q, q, h)
+    y_intra = jnp.einsum("cijh,cjhp->cihp", scores, xq)
+
+    # Chunk summary state: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j
+    tail = jnp.exp(cum[:, -1:, :] - cum)  # (nc, q, h) decay j -> chunk end
+    sb = jnp.einsum("cqh,cqn,cqhp->chpn", tail * dtq, Bq, xq)  # (nc, h, p, n)
+    chunk_decay = jnp.exp(cum[:, -1, :])  # (nc, h) total chunk decay
+
+    def carry_step(s_prev, inp):
+        sb_c, dec_c = inp
+        s_out = s_prev  # state *entering* this chunk
+        s_next = dec_c[:, None, None] * s_prev + sb_c
+        return s_next, s_out
+
+    s0 = jnp.zeros((h, p, n), x.dtype)
+    _, s_in = jax.lax.scan(carry_step, s0, (sb, chunk_decay))  # (nc, h, p, n)
+
+    # Inter-chunk: y_inter[i] = C_i · (exp(cum_i) * S_in)
+    y_inter = jnp.einsum(
+        "cin,cih,chpn->cihp", Cq, jnp.exp(cum), s_in
+    )
+    y = (y_intra + y_inter).reshape(l, h, p)
+    return y + D[None, :, None] * x
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+class SSMState(NamedTuple):
+    """Decode-time recurrent state per layer-stack."""
+
+    h: jax.Array  # (L_layers, B, H, P, N)
+    conv: jax.Array  # (L_layers, B, d_conv-1, d_inner + 2N) rolling conv input
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> Params:
+    ssm = cfg.ssm
+    assert ssm is not None
+    d = cfg.d_model
+    di = ssm.d_inner(d)
+    nh = ssm.n_heads(d)
+    n = ssm.d_state
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * n + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (ssm.d_conv, conv_dim), jnp.float32)
+                   * (1.0 / math.sqrt(ssm.d_conv))).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  x: (B, L, C), w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def mamba_block(params: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    ssm = cfg.ssm
+    b, s, d = x.shape
+    di = ssm.d_inner(d)
+    nh = ssm.n_heads(d)
+    n = ssm.d_state
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs, B, C = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])  # (H,) negative
+
+    pad = (-s) % ssm.chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+
+    xh = xs.reshape(b, s + pad, nh, ssm.head_dim)
+    y = jax.vmap(
+        lambda xb, dtb, Bb, Cb: ssd_chunked(
+            xb, dtb, A, Bb, Cb, params["D"], ssm.chunk
+        )
+    )(xh.astype(jnp.float32), dt, B.astype(jnp.float32), C.astype(jnp.float32))
+    y = y[:, :s].reshape(b, s, di).astype(x.dtype)
+
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+
+
+def mamba_decode_step(
+    params: Params,
+    x: jax.Array,  # (B, 1, d)
+    h_state: jax.Array,  # (B, H, P, N)
+    conv_state: jax.Array,  # (B, K-1, conv_dim)
+    cfg: ArchConfig,
+):
+    """O(1) decode.  Returns (y (B,1,d), new_h, new_conv)."""
+    ssm = cfg.ssm
+    b, _, d = x.shape
+    di = ssm.d_inner(d)
+    nh = ssm.n_heads(d)
+    n = ssm.d_state
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])[:, 0]
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    # Rolling conv state: append, convolve, keep last K-1.
+    full = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B, K, C)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", full, w) + params["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    new_conv = full[:, 1:]
+
+    xs, B, C = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(b, nh, ssm.head_dim).astype(jnp.float32)
+
+    decay = jnp.exp(dt * A)  # (B,H)
+    upd = dt[:, :, None, None] * (xh[:, :, :, None] * B[:, None, None, :].astype(jnp.float32))
+    new_h = decay[:, :, None, None] * h_state + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_h, C.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(b, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    return jnp.einsum("be,ed->bd", y, params["out_proj"])[:, None, :], new_h, new_conv

@@ -1,0 +1,118 @@
+"""Model zoo: build train/serve entry points + input specs for any arch."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+from . import encdec, lm
+from .layers import dtype_of
+
+
+@dataclass(frozen=True)
+class ModelBundle:
+    """Uniform interface over decoder-only and encoder-decoder families."""
+
+    cfg: ArchConfig
+    init: Callable  # key -> params
+    loss: Callable  # (params, batch) -> scalar
+    prefill: Callable  # (params, batch) -> last-position logits
+    decode_init: Callable  # (params, batch, seq_len) -> state
+    decode_step: Callable  # (params, state, tokens) -> (logits, state)
+
+
+def build_model(cfg: ArchConfig) -> ModelBundle:
+    if cfg.family == "encdec":
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(key, cfg),
+            loss=lambda p, b: encdec.lm_loss(p, cfg, b),
+            prefill=lambda p, b: encdec.decode_train(
+                p, cfg, b["tokens"], encdec.encode(p, cfg, b["frames"])
+            )[:, -1:, :],
+            decode_init=lambda p, b, s: encdec.init_decode_state(p, cfg, b["frames"], s),
+            decode_step=lambda p, st, t: encdec.decode_step(p, cfg, st, t),
+        )
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda key: lm.init_params(key, cfg),
+        loss=lambda p, b: lm.lm_loss(p, cfg, b),
+        prefill=lambda p, b: lm.prefill(p, cfg, b),
+        decode_init=lambda p, b, s: lm.init_decode_state(cfg, _batch_size(b), s),
+        decode_step=lambda p, st, t: lm.decode_step(p, cfg, st, t),
+    )
+
+
+def _batch_size(batch: Dict[str, jax.Array]) -> int:
+    return next(iter(batch.values())).shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs — the dry-run's stand-ins, zero allocation)
+# ---------------------------------------------------------------------------
+def input_specs(
+    cfg: ArchConfig, shape: ShapeConfig, *, batch_override: Optional[int] = None
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for one (arch x shape) cell.
+
+    For ``train``/``prefill`` this is the token (and stub-modality) batch;
+    for ``decode`` it is the (B, 1) next-token ids — the KV-cache state is
+    produced by ``decode_init`` (also abstractly, via ``jax.eval_shape``).
+    """
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    emb = dtype_of(cfg.compute_dtype)
+
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model), emb)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        return specs
+    if cfg.family == "vlm":
+        n_text = s - cfg.n_patches
+        assert n_text > 0, "seq_len must exceed the patch budget"
+        specs["patches"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_vision), emb)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, n_text), i32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, n_text), i32)
+        return specs
+    specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    return specs
+
+
+def abstract_params(cfg: ArchConfig):
+    """Parameter ShapeDtypeStructs without allocating (dry-run / sharding)."""
+    bundle = build_model(cfg)
+    return jax.eval_shape(bundle.init, jax.random.key(0))
+
+
+def abstract_decode_state(cfg: ArchConfig, shape: ShapeConfig):
+    bundle = build_model(cfg)
+    params = abstract_params(cfg)
+    batch = input_specs(cfg, shape)
+    if cfg.family == "encdec":
+        frames = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.n_frames, cfg.d_model), dtype_of(cfg.compute_dtype)
+        )
+        return jax.eval_shape(
+            lambda p, f: bundle.decode_init(p, {"frames": f}, shape.seq_len),
+            params,
+            frames,
+        )
+    return jax.eval_shape(
+        lambda p, t: bundle.decode_init(p, {"tokens": t}, shape.seq_len),
+        params,
+        batch["tokens"],
+    )

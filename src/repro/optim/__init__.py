@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, AdamWState, lr_schedule, make_adamw
+
+__all__ = ["AdamWConfig", "AdamWState", "lr_schedule", "make_adamw"]

@@ -1,0 +1,22 @@
+from .sharding import (
+    ShardingPolicy,
+    activation_sharding,
+    batch_shardings,
+    choose_policy,
+    decode_state_shardings,
+    make_policy,
+    maybe_constrain,
+    maybe_constrain_heads,
+    maybe_constrain_logits,
+    params_shardings,
+)
+from .train_loop import TrainRuntime, get_runtime, make_train_fns, shard_train_step
+from .serve_loop import shard_decode_step, shard_prefill_step
+
+__all__ = [
+    "ShardingPolicy", "TrainRuntime", "activation_sharding", "batch_shardings",
+    "choose_policy", "decode_state_shardings", "get_runtime", "make_policy",
+    "make_train_fns", "maybe_constrain", "maybe_constrain_heads",
+    "maybe_constrain_logits", "params_shardings", "shard_decode_step",
+    "shard_prefill_step", "shard_train_step",
+]

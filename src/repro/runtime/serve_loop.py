@@ -1,0 +1,58 @@
+"""Serve-step factories: prefill (full sequence) and decode (KV-cache step)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import abstract_decode_state, build_model, input_specs
+
+from .sharding import (
+    ShardingPolicy,
+    activation_sharding,
+    batch_shardings,
+    decode_state_shardings,
+    params_shardings,
+)
+
+
+def shard_prefill_step(cfg: ArchConfig, shape: ShapeConfig, policy: ShardingPolicy):
+    """pjit'd prefill: batch -> last-position logits (KV build is the same
+    compute graph; see models.lm.prefill)."""
+    bundle = build_model(cfg)
+    params_abs = jax.eval_shape(bundle.init, jax.random.key(0))
+    batch_abs = dict(input_specs(cfg, shape))
+    p_sh = params_shardings(policy, params_abs)
+    b_sh = batch_shardings(policy, batch_abs)
+
+    def wrapped(params, batch):
+        with activation_sharding(policy):
+            return bundle.prefill(params, batch)
+
+    fn = jax.jit(wrapped, in_shardings=(p_sh, b_sh), out_shardings=None)
+    return fn, (params_abs, batch_abs)
+
+
+def shard_decode_step(cfg: ArchConfig, shape: ShapeConfig, policy: ShardingPolicy):
+    """pjit'd decode: (params, state, tokens) -> (logits, state)."""
+    bundle = build_model(cfg)
+    params_abs = jax.eval_shape(bundle.init, jax.random.key(0))
+    state_abs = abstract_decode_state(cfg, shape)
+    tokens_abs = dict(input_specs(cfg, shape))  # {"tokens": (B, 1)}
+
+    p_sh = params_shardings(policy, params_abs)
+    s_sh = decode_state_shardings(policy, state_abs)
+    t_sh = batch_shardings(policy, tokens_abs)
+
+    def wrapped(params, state, batch):
+        return bundle.decode_step(params, state, batch["tokens"])
+
+    fn = jax.jit(
+        wrapped,
+        in_shardings=(p_sh, s_sh, t_sh),
+        out_shardings=(None, s_sh),
+        donate_argnums=(1,),
+    )
+    return fn, (params_abs, state_abs, tokens_abs)

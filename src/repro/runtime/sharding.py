@@ -1,0 +1,338 @@
+"""Sharding policy: logical rules + divisibility fallback.
+
+Mesh axes: ``("pod",) data, model``.  ``pod``+``data`` are the DP/FSDP axes,
+``model`` is TP/SP.  A tensor dim is sharded on an axis only when divisible
+by that axis size — this cleanly handles the 14/15/24-head archs on a 16-way
+model axis (the dim stays replicated and XLA inserts the collectives), per
+DESIGN.md §5.
+
+Activation sequence-parallel constraints are injected through a contextvar
+(:func:`activation_sharding`) so model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]  # ("pod", "data") — or incl. "model" (pure DP)
+    model_axis: Optional[str] = "model"  # None = pure DP / ZeRO-3 layout
+    fsdp: bool = True  # shard big param dims over dp axes too
+    seq_parallel: bool = False  # shard residual-stream seq dim on model axis
+
+    @property
+    def dp_size(self) -> int:
+        size = 1
+        for a in self.dp_axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.model_axis] if self.model_axis else 1
+
+    # -- divisibility-aware axis assignment ---------------------------------
+    def shard_if(self, dim: int, axis) -> Optional[Any]:
+        """Return axis (str or tuple) if ``dim`` divides evenly, else None."""
+        if axis is None:
+            return None
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        size = 1
+        for a in axes:
+            size *= self.mesh.shape[a]
+        return axis if dim % size == 0 else None
+
+    def batch_axes(self, batch: int) -> Optional[Tuple[str, ...]]:
+        """Longest dp-axis prefix-with-suffix-drop that divides the batch."""
+        axes = list(self.dp_axes)
+        while axes:
+            size = 1
+            for a in axes:
+                size *= self.mesh.shape[a]
+            if batch % size == 0:
+                return tuple(axes)
+            axes.pop()  # drop the innermost axis and retry
+        return None
+
+
+def make_policy(
+    mesh: Mesh,
+    *,
+    fsdp: bool = True,
+    seq_parallel: bool = False,
+    pure_dp: bool = False,
+) -> ShardingPolicy:
+    base = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if pure_dp:
+        return ShardingPolicy(
+            mesh=mesh, dp_axes=base + ("model",), model_axis=None, fsdp=fsdp
+        )
+    return ShardingPolicy(mesh=mesh, dp_axes=base, fsdp=fsdp, seq_parallel=seq_parallel)
+
+
+def choose_policy(cfg, shape, mesh, *, seq_parallel: bool = False) -> ShardingPolicy:
+    """Per-(arch, shape) layout selection (DESIGN.md §5).
+
+    * train, small model or TP-unfriendly head count -> pure DP (ZeRO-3):
+      batch over every mesh axis, params FSDP-sharded over all axes; no
+      redundant attention compute, no TP collectives.  Train batches
+      (256 seqs) divide the full mesh, and at >=4k tokens/device even 340B
+      is compute-bound under FSDP gathers.
+    * otherwise -> TP on 'model' (heads/ffn/vocab with divisibility
+      fallback; q-sequence context parallelism when heads don't divide)
+      + DP/FSDP on 'pod'x'data'.  Decode always lands here: batch 128 does
+      not divide 256 chips, and per-token FSDP gathers would dominate.
+    """
+    tp = mesh.shape["model"]
+    if cfg.ssm is not None and cfg.n_heads == 0:
+        heads = cfg.ssm.n_heads(cfg.d_model)
+    else:
+        heads = cfg.n_heads
+    heads_ok = heads % tp == 0
+    # rough param count (embeddings + blocks) without tracing
+    n_params = cfg.vocab * cfg.d_model
+    per_layer = 4 * cfg.d_model * cfg.n_heads * cfg.hd if cfg.n_heads else 0
+    if cfg.moe is not None:
+        per_layer += 3 * cfg.d_model * cfg.moe.d_ff * cfg.moe.n_experts
+    elif cfg.d_ff:
+        per_layer += 3 * cfg.d_model * cfg.d_ff
+    if cfg.ssm is not None:
+        di = cfg.ssm.d_inner(cfg.d_model)
+        per_layer += cfg.d_model * (2 * di + 2 * cfg.ssm.d_state) + di * cfg.d_model
+    n_params += cfg.n_layers * per_layer
+    big = n_params >= 8e9
+
+    moe_tp_ok = cfg.moe is None or cfg.moe.n_experts % tp == 0
+    mesh_size = 1
+    for a in mesh.axis_names:
+        mesh_size *= mesh.shape[a]
+    # Pure DP requires the global batch to cover the whole mesh — on the
+    # 512-chip multi-pod mesh a 256-seq batch would idle the model axis and
+    # replicate compute 16x (measured: 128 GiB/chip on mixtral).
+    pure_dp_viable = shape.global_batch % mesh_size == 0
+    if (
+        shape.kind == "train"
+        and pure_dp_viable
+        and not (big and heads_ok and moe_tp_ok)
+    ):
+        # Covers mixtral/granite too: with E % tp != 0 the per-layer TP-MoE
+        # activation all-reduce is O(B*E*cap*d) and dominates (measured 64 s
+        # vs ~17 s of ZeRO-3 param gathers at 141B).
+        return make_policy(mesh, pure_dp=True)
+    return make_policy(mesh, seq_parallel=seq_parallel or (big and shape.kind == "train"))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs by path pattern
+# ---------------------------------------------------------------------------
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def param_spec(policy: ShardingPolicy, path, leaf) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    Shape convention: stacked layer dims lead (never sharded — scan axis);
+    the last two dims are the matmul dims.  TP shards the 'feature' dim
+    (heads*hd / d_ff / vocab / experts' hidden), FSDP shards the d_model dim.
+    """
+    name = _path_str(path)
+    shape = leaf.shape
+    m = policy.model_axis
+    dp = policy.dp_axes if policy.fsdp else None
+    nd = len(shape)
+
+    if nd == 0:
+        return P()
+    # Biases / norms / small vectors / depthwise convs / routers: replicate.
+    if nd == 1 or any(
+        k in name
+        for k in ("ln", "norm", "bias", "dt_bias", "A_log", "/D", "conv", "pos", "router")
+    ):
+        return P(*([None] * nd))
+
+    if m is None:
+        # Pure DP (ZeRO-3): shard the largest divisible dim over all axes.
+        s: list = [None] * nd
+        for idx in sorted(range(nd), key=lambda i: -shape[i]):
+            if policy.shard_if(shape[idx], dp):
+                s[idx] = dp
+                break
+        return P(*s)
+
+    def spec_2d(d_in_idx: int, d_out_idx: int, out_axis, in_axis):
+        s: list = [None] * nd
+        s[d_out_idx] = policy.shard_if(shape[d_out_idx], out_axis)
+        s[d_in_idx] = policy.shard_if(shape[d_in_idx], in_axis)
+        return P(*s)
+
+    if "embed" in name or "unembed" in name:
+        # (V, d) or (d, V): shard vocab on model, d on dp.
+        v_idx = int(shape[-2] < shape[-1]) - 2  # bigger dim is vocab
+        d_idx = -1 if v_idx == -2 else -2
+        s = [None] * nd
+        s[nd + v_idx] = policy.shard_if(shape[v_idx], m)
+        s[nd + d_idx] = policy.shard_if(shape[d_idx], dp)
+        return P(*s)
+    if re.search(r"w_down|out_proj|wo", name):
+        # (.., ff/heads, d_model): contract dim on model, d_model on dp.
+        return spec_2d(-2, -1, dp, m)
+    # Default matmul weight (.., d_model, features): features on model, d on dp.
+    return spec_2d(-2, -1, m, dp)
+
+
+def params_shardings(policy: ShardingPolicy, params_tree):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(policy.mesh, param_spec(policy, path, leaf)),
+        params_tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batch / state specs
+# ---------------------------------------------------------------------------
+def batch_spec(policy: ShardingPolicy, leaf, *, microbatched: bool) -> P:
+    nd = len(leaf.shape)
+    b_dim = 1 if microbatched else 0
+    dp = policy.batch_axes(leaf.shape[b_dim])
+    lead = [None, dp] if microbatched else [dp]
+    rest = [None] * (nd - len(lead))
+    return P(*lead, *rest)
+
+
+def batch_shardings(policy: ShardingPolicy, batch_tree, *, microbatched: bool = False):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(
+            policy.mesh, batch_spec(policy, leaf, microbatched=microbatched)
+        ),
+        batch_tree,
+    )
+
+
+def decode_state_spec(policy: ShardingPolicy, path, leaf) -> P:
+    """KV caches (L,B,H,W,hd), ssm states (L,B,H,P,N): B on dp, H on model."""
+    name = _path_str(path)
+    shape = leaf.shape
+    nd = len(shape)
+    if nd >= 4:
+        s = [None] * nd
+        s[1] = policy.batch_axes(shape[1])
+        if policy.model_axis is not None:
+            s[2] = policy.shard_if(shape[2], policy.model_axis)
+            if s[2] is None and nd >= 5:
+                # kv heads don't divide the model axis: shard the cache's
+                # SEQUENCE dim instead.  Decode softmax/contraction over a
+                # sharded seq dim lowers to small (B, Hkv, G) all-reduces,
+                # while the cache itself drops tp_size x per device.
+                s[3] = policy.shard_if(shape[3], policy.model_axis)
+        return P(*s)
+    return P(*([None] * nd))
+
+
+def decode_state_shardings(policy: ShardingPolicy, state_tree):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(policy.mesh, decode_state_spec(policy, path, leaf)),
+        state_tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation constraint injection
+#
+# GSPMD propagation alone makes catastrophic choices through the
+# reshape-heavy attention path (observed: it all-gathered the *global batch*
+# to shard 14 heads 2-way).  The train/serve factories install the policy in
+# a contextvar; model code calls the maybe_* hooks, which pin batch -> dp,
+# heads -> model (when divisible), and seq -> model under sequence
+# parallelism.  No-ops outside a policy context (smoke tests, examples).
+# ---------------------------------------------------------------------------
+_POLICY: contextvars.ContextVar = contextvars.ContextVar("act_policy", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(policy: Optional[ShardingPolicy]):
+    token = _POLICY.set(policy)
+    try:
+        yield
+    finally:
+        _POLICY.reset(token)
+
+
+def maybe_constrain(x: jax.Array) -> jax.Array:
+    """Residual stream (B, S, d): batch->dp, seq->model iff seq_parallel."""
+    policy: Optional[ShardingPolicy] = _POLICY.get()
+    if policy is None or x.ndim != 3 or x.shape[1] == 1:
+        return x
+    seq_axis = policy.model_axis if (
+        policy.model_axis is not None
+        and policy.seq_parallel
+        and x.shape[1] % policy.tp_size == 0
+    ) else None
+    spec = P(policy.batch_axes(x.shape[0]), seq_axis, None)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def maybe_constrain_heads(x: jax.Array, role: str = "q") -> jax.Array:
+    """(B, H, S, D) q/k/v: batch->dp, heads->model when divisible.
+
+    When the head count does NOT divide the model axis (qwen2 14H, smollm
+    15H, phi4 24H, whisper 20H on a 16-way axis), attention would otherwise
+    be *replicated* across the model axis — 16x redundant flops, observed to
+    dominate the whole step.  Fallback: context parallelism — shard the
+    query SEQUENCE dim on the model axis (q rows are independent in online
+    softmax; K/V stay replicated so no collectives enter the inner loop).
+    """
+    policy: Optional[ShardingPolicy] = _POLICY.get()
+    if policy is None or x.ndim != 4:
+        return x
+    b_axes = policy.batch_axes(x.shape[0])
+    if policy.model_axis is None:
+        return jax.lax.with_sharding_constraint(x, P(b_axes, None, None, None))
+    h_axis = policy.shard_if(x.shape[1], policy.model_axis)
+    s_axis = None
+    if h_axis is None and role == "q" and x.shape[2] > 1:
+        # Context parallelism: q rows are independent under online softmax;
+        # K/V stay replicated so the inner loop remains collective-free.
+        s_axis = policy.shard_if(x.shape[2], policy.model_axis)
+    spec = P(b_axes, h_axis, s_axis, None)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def maybe_constrain_moe(x: jax.Array) -> jax.Array:
+    """Dispatched MoE tensors (B, E, C, d): batch->dp; experts->model when
+    divisible (EP), else replicated over model.
+
+    NOTE sharding the *capacity* dim was tried and refuted (§Perf cell 2):
+    the combine gather then crosses cap shards and all-gathers every
+    expert's output per layer.
+    """
+    policy: Optional[ShardingPolicy] = _POLICY.get()
+    if policy is None or x.ndim != 4:
+        return x
+    b_axes = policy.batch_axes(x.shape[0])
+    if policy.model_axis is None:
+        return jax.lax.with_sharding_constraint(x, P(b_axes, None, None, None))
+    e_axis = policy.shard_if(x.shape[1], policy.model_axis)
+    return jax.lax.with_sharding_constraint(x, P(b_axes, e_axis, None, None))
+
+
+def maybe_constrain_logits(x: jax.Array) -> jax.Array:
+    """(B, S, V) logits: batch->dp, vocab->model when divisible."""
+    policy: Optional[ShardingPolicy] = _POLICY.get()
+    if policy is None or x.ndim != 3:
+        return x
+    v_axis = (
+        policy.shard_if(x.shape[-1], policy.model_axis) if policy.model_axis else None
+    )
+    spec = P(policy.batch_axes(x.shape[0]), None, v_axis)
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,157 @@
+"""Train-step factory: grads + AdamW under pjit, with microbatched gradient
+accumulation, remat (in the model), FSDP+TP shardings, and donation."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import build_model, input_specs
+from repro.optim.adamw import AdamWConfig, AdamWState, make_adamw
+
+from .sharding import (
+    ShardingPolicy,
+    activation_sharding,
+    batch_shardings,
+    params_shardings,
+)
+
+
+@dataclass(frozen=True)
+class TrainRuntime:
+    """Per-arch runtime knobs (memory-fit strategy; DESIGN.md §5)."""
+
+    microbatches: int = 1
+    grad_dtype: Optional[str] = None  # accumulation dtype (None = param dtype)
+    adamw: AdamWConfig = AdamWConfig()
+
+
+# Per-arch overrides used by the launcher and the dry-run.
+TRAIN_RUNTIMES: Dict[str, TrainRuntime] = {
+    # mb=4, not 16: every microbatch re-gathers the FSDP-sharded params per
+    # layer, so param collective traffic scales with the microbatch count
+    # (measured: 2.1 TB of wo gathers alone at mb=16).  With sequence
+    # parallelism the activation checkpoints at mb=4 fit comfortably.
+    "nemotron-4-340b": TrainRuntime(
+        microbatches=4,
+        grad_dtype="bfloat16",
+        adamw=AdamWConfig(m_dtype="bfloat16", v_dtype="bfloat16", master_dtype=None),
+    ),
+    "mixtral-8x22b": TrainRuntime(
+        microbatches=4,
+        grad_dtype="bfloat16",
+        # no fp32 master: under ZeRO-3 the fp32 master copies are gathered
+        # alongside the bf16 params and cost ~10 GiB/chip at 141B (§Perf).
+        adamw=AdamWConfig(m_dtype="bfloat16", v_dtype="bfloat16", master_dtype=None),
+    ),
+    "llava-next-mistral-7b": TrainRuntime(
+        microbatches=2, adamw=AdamWConfig(master_dtype="float32")
+    ),
+    "whisper-large-v3": TrainRuntime(adamw=AdamWConfig(master_dtype="float32")),
+}
+
+
+def get_runtime(arch_id: str) -> TrainRuntime:
+    return TRAIN_RUNTIMES.get(arch_id, TrainRuntime())
+
+
+def make_train_fns(cfg: ArchConfig, rt: TrainRuntime):
+    """Returns (init_fn, train_step) — pure functions ready for jit/pjit."""
+    bundle = build_model(cfg)
+    opt_init, opt_update = make_adamw(rt.adamw)
+
+    def init_fn(key):
+        params = bundle.init(key)
+        return params, opt_init(params)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if rt.microbatches > 1:
+            # batch leaves are (k, B/k, ...): scan-accumulate grads.
+            gdt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32, None: None}[
+                rt.grad_dtype
+            ]
+
+            def mb_loss(p, mb):
+                return bundle.loss(p, mb)
+
+            def acc_body(carry, mb):
+                gacc, lacc = carry
+                loss, g = jax.value_and_grad(mb_loss)(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype) / rt.microbatches, gacc, g
+                )
+                return (gacc, lacc + loss / rt.microbatches), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, gdt or p.dtype), params
+            )
+            (grads, loss), _ = jax.lax.scan(acc_body, (g0, 0.0), batch)
+        else:
+            loss, grads = jax.value_and_grad(bundle.loss)(params, batch)
+
+        new_params, new_opt, metrics = opt_update(grads, opt_state, params)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return init_fn, train_step
+
+
+def shard_train_step(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    policy: ShardingPolicy,
+    rt: Optional[TrainRuntime] = None,
+):
+    """Build the pjit'd train step + abstract inputs for lowering.
+
+    Returns (jitted_fn, (params_abs, opt_abs, batch_abs)) where the abstract
+    values carry ShapeDtypeStructs — ``.lower()`` on them never allocates.
+    """
+    rt = rt or get_runtime(cfg.arch_id)
+    # Microbatching must keep the per-microbatch batch divisible by the DP
+    # extent, or the surplus mesh axes idle and compute replicates (observed:
+    # 16x flops on llava under pure-DP with microbatches=2).
+    if rt.microbatches > 1:
+        mb = rt.microbatches
+        while mb > 1 and (shape.global_batch // mb) % policy.dp_size != 0:
+            mb //= 2
+        if mb != rt.microbatches:
+            rt = TrainRuntime(microbatches=mb, grad_dtype=rt.grad_dtype, adamw=rt.adamw)
+    init_fn, train_step = make_train_fns(cfg, rt)
+
+    params_abs, opt_abs = jax.eval_shape(init_fn, jax.random.key(0))
+    batch_abs = dict(input_specs(cfg, shape))
+    if rt.microbatches > 1:
+        k = rt.microbatches
+        batch_abs = {
+            name: jax.ShapeDtypeStruct((k, s.shape[0] // k, *s.shape[1:]), s.dtype)
+            for name, s in batch_abs.items()
+        }
+
+    p_sh = params_shardings(policy, params_abs)
+    o_sh = AdamWState(
+        step=NamedSharding(policy.mesh, P()),
+        m=params_shardings(policy, opt_abs.m),
+        v=params_shardings(policy, opt_abs.v),
+        master=params_shardings(policy, opt_abs.master)
+        if opt_abs.master is not None
+        else None,
+    )
+    b_sh = batch_shardings(policy, batch_abs, microbatched=rt.microbatches > 1)
+
+    def wrapped(params, opt_state, batch):
+        with activation_sharding(policy):
+            return train_step(params, opt_state, batch)
+
+    fn = jax.jit(
+        wrapped,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1),
+    )
+    return fn, (params_abs, opt_abs, batch_abs)

@@ -1,0 +1,20 @@
+"""Shallow-water forward model (ExaHyPE stand-in; DESIGN.md §2)."""
+from .scenario import (
+    TohokuInverseProblem,
+    TohokuScenario,
+    make_hierarchy,
+    train_level0_gp,
+)
+from .solver import SWEConfig, SWEState, lake_at_rest_error, make_solver, step
+
+__all__ = [
+    "SWEConfig",
+    "SWEState",
+    "TohokuInverseProblem",
+    "TohokuScenario",
+    "lake_at_rest_error",
+    "make_hierarchy",
+    "make_solver",
+    "step",
+    "train_level0_gp",
+]

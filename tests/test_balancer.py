@@ -1,0 +1,160 @@
+"""Load balancer (paper Algorithm 1) behaviour tests."""
+import threading
+import time
+
+import pytest
+
+from repro.core.balancer import LoadBalancer, Server
+
+
+def make_worker(duration=0.0, fail=False):
+    def fn(x):
+        if fail:
+            raise RuntimeError("injected fault")
+        if duration:
+            time.sleep(duration)
+        return x * 2
+
+    return fn
+
+
+def test_basic_dispatch_and_result_order():
+    lb = LoadBalancer([Server(make_worker()) for _ in range(2)])
+    reqs = [lb.submit_async(i) for i in range(16)]
+    assert [lb.result(r) for r in reqs] == [2 * i for i in range(16)]
+
+
+def test_fifo_start_order_single_server():
+    """With one server, dispatch must follow arrival order (paper FIFO)."""
+    started = []
+    lock = threading.Lock()
+
+    def fn(x):
+        with lock:
+            started.append(x)
+        time.sleep(0.002)
+        return x
+
+    lb = LoadBalancer([Server(fn)])
+    reqs = [lb.submit_async(i) for i in range(10)]
+    for r in reqs:
+        lb.result(r)
+    assert started == list(range(10))
+
+
+def test_idle_time_telemetry_small():
+    """Paper Fig. 9: queue delays are tiny relative to service times."""
+    lb = LoadBalancer([Server(make_worker(0.01)) for _ in range(4)])
+    reqs = [lb.submit_async(i) for i in range(8)]
+    for r in reqs:
+        lb.result(r)
+    s = lb.summary()
+    assert s["n_requests"] == 8
+    # mean idle should be well under one service time
+    assert s["mean_idle_s"] < 0.01
+
+
+def test_heterogeneous_pools_no_head_of_line_blocking():
+    """A queued fine-PDE request must not block a free GP server."""
+    t_slow = 0.05
+    lb = LoadBalancer(
+        [
+            Server(make_worker(t_slow), name="pde", capacity_tags=("pde",)),
+            Server(make_worker(0.0), name="gp", capacity_tags=("gp",)),
+        ]
+    )
+    # occupy the pde server, then queue another pde + one gp request
+    r1 = lb.submit_async(1, tag="pde")
+    time.sleep(0.005)
+    r2 = lb.submit_async(2, tag="pde")
+    t0 = time.monotonic()
+    r3 = lb.submit_async(3, tag="gp")
+    assert lb.result(r3) == 6
+    gp_latency = time.monotonic() - t0
+    assert gp_latency < t_slow / 2, "gp request stuck behind pde queue"
+    lb.result(r1), lb.result(r2)
+
+
+def test_server_failure_requeues_and_marks_dead():
+    flaky = Server(make_worker(fail=True), name="flaky")
+    ok = Server(make_worker(), name="ok")
+    lb = LoadBalancer([flaky, ok], max_retries=2)
+    # Submit a few: some land on flaky first, get re-queued onto ok.
+    reqs = [lb.submit_async(i) for i in range(6)]
+    assert [lb.result(r) for r in reqs] == [2 * i for i in range(6)]
+    assert flaky.dead
+    assert lb.summary()["failures"] >= 1
+
+
+def test_all_servers_dead_raises():
+    lb = LoadBalancer([Server(make_worker(fail=True))], max_retries=1)
+    req = lb.submit_async(1)
+    with pytest.raises(RuntimeError):
+        lb.result(req, timeout=5)
+
+
+def test_elastic_add_server_unblocks_queue():
+    lb = LoadBalancer([Server(make_worker(0.05), name="slow")])
+    reqs = [lb.submit_async(i) for i in range(4)]
+    lb.add_server(Server(make_worker(), name="fast"))
+    assert sorted(lb.result(r) for r in reqs) == [0, 2, 4, 6]
+    ups = lb.summary()["per_server_uptime"]
+    assert ups.get("fast", 0) >= 0  # fast server participated in the pool
+
+
+def test_retire_server():
+    s1, s2 = Server(make_worker(), name="a"), Server(make_worker(), name="b")
+    lb = LoadBalancer([s1, s2])
+    lb.retire_server("a")
+    reqs = [lb.submit_async(i) for i in range(4)]
+    for r in reqs:
+        lb.result(r)
+    assert s1.stats.n_requests == 0
+    assert s2.stats.n_requests == 4
+
+
+def test_micro_batching_fuses_requests():
+    calls = []
+
+    def single(x):
+        calls.append(1)
+        return x * 2
+
+    def batched(xs):
+        calls.append(len(xs))
+        return [x * 2 for x in xs]
+
+    lb = LoadBalancer(
+        [Server(single, batch_fn=batched)], batch_window_s=0.02, max_batch=64
+    )
+    reqs = [lb.submit_async(i, tag="gp", batchable=True) for i in range(12)]
+    assert [lb.result(r) for r in reqs] == [2 * i for i in range(12)]
+    assert max(calls) > 1, "no request coalescing happened"
+
+
+def test_hedged_submit_returns_correct_result():
+    lb = LoadBalancer(
+        [Server(make_worker(0.001)) for _ in range(2)], hedge_quantile=0.9
+    )
+    for i in range(8):  # build runtime history
+        lb.submit(i, tag="t")
+    assert lb.submit_hedged(21, tag="t") == 42
+
+
+def test_checkpoint_queue_snapshot():
+    lb = LoadBalancer([Server(make_worker(0.05))])
+    reqs = [lb.submit_async(i, tag="x") for i in range(5)]
+    time.sleep(0.01)
+    snap = lb.checkpoint_queue()
+    assert all(e["tag"] == "x" for e in snap)
+    for r in reqs:
+        lb.result(r)
+
+
+def test_timeline_matches_requests():
+    lb = LoadBalancer([Server(make_worker(0.001), name="s0")])
+    for i in range(5):
+        lb.submit(i, tag="lvl0")
+    rows = lb.timeline()
+    assert len(rows) == 5
+    assert all(row["server"] == "s0" and row["end"] >= row["start"] for row in rows)

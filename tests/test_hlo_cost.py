@@ -1,0 +1,76 @@
+"""Trip-count-aware HLO cost parser vs fully-unrolled ground truth."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import analyze, parse_hlo
+
+
+def _scan_matmul(n, unroll=1):
+    def f(x, w):
+        def body(x, _):
+            return jnp.tanh(x @ w), None
+
+        x, _ = jax.lax.scan(body, x, None, length=n, unroll=unroll)
+        return x
+
+    return f
+
+
+X = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+W = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+
+@pytest.mark.parametrize("n", [1, 4, 16])
+def test_scan_flops_scale_with_trip_count(n):
+    c = jax.jit(_scan_matmul(n)).lower(X, W).compile()
+    s = analyze(c.as_text())
+    assert s.flops == pytest.approx(2 * 256**3 * n, rel=1e-6)
+
+
+def test_matches_unrolled_ground_truth():
+    looped = analyze(jax.jit(_scan_matmul(8)).lower(X, W).compile().as_text())
+    unrolled = (
+        jax.jit(_scan_matmul(8, unroll=8)).lower(X, W).compile().cost_analysis()
+    )
+    assert looped.flops == pytest.approx(float(unrolled["flops"]), rel=1e-6)
+
+
+def test_nested_scans():
+    def g(x, w):
+        def outer(x, _):
+            def inner(x, _):
+                return x @ w, None
+
+            x, _ = jax.lax.scan(inner, x, None, length=3)
+            return x, None
+
+        x, _ = jax.lax.scan(outer, x, None, length=5)
+        return x
+
+    s = analyze(jax.jit(g).lower(X, W).compile().as_text())
+    assert s.flops == pytest.approx(2 * 256**3 * 15, rel=1e-6)
+
+
+def test_parser_handles_tuple_types_with_comments():
+    # lax.scan carries produce tuple-typed whiles with /*index=N*/ comments.
+    def f(x, w):
+        def body(carry, _):
+            a, b = carry
+            return (jnp.tanh(a @ w), b + 1.0), None
+
+        (x, _), _ = jax.lax.scan(body, (x, jnp.zeros_like(x)), None, length=4)
+        return x
+
+    txt = jax.jit(f).lower(X, W).compile().as_text()
+    comps = parse_hlo(txt)
+    n_whiles = sum(op.opcode == "while" for c in comps.values() for op in c.ops)
+    assert n_whiles >= 1
+    s = analyze(txt)
+    assert s.flops == pytest.approx(2 * 256**3 * 4, rel=1e-6)
+
+
+def test_bytes_and_collectives_nonnegative():
+    s = analyze(jax.jit(_scan_matmul(4)).lower(X, W).compile().as_text())
+    assert s.bytes > 0
+    assert s.collective_bytes == 0  # single device: no collectives

@@ -1,0 +1,130 @@
+"""MCMC correctness: MH, DA (Algorithm 2), MLDA recursion (paper §5)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdaptiveMetropolis,
+    GaussianRandomWalk,
+    MLDASampler,
+    PCNProposal,
+    delayed_acceptance,
+    metropolis_hastings,
+)
+from repro.core.checkpoint import load_sampler, save_sampler
+
+
+def std_normal(t):
+    return float(-0.5 * np.sum(np.asarray(t) ** 2))
+
+
+def shifted_normal(t):
+    return float(-0.5 * np.sum((np.asarray(t) - 0.4) ** 2))
+
+
+def test_mh_targets_standard_normal():
+    rng = np.random.default_rng(0)
+    chain, _, stats = metropolis_hastings(
+        std_normal, GaussianRandomWalk(1.0), np.zeros(2), 20000, rng
+    )
+    x = chain[4000:]
+    assert np.all(np.abs(x.mean(0)) < 0.12)
+    assert np.all(np.abs(x.var(0) - 1.0) < 0.2)
+    assert 0.2 < stats.acceptance_rate < 0.8
+
+
+def test_da_exactness_wrong_coarse():
+    """DA must target the fine density even with a biased coarse filter."""
+    rng = np.random.default_rng(1)
+    chain, sampler = delayed_acceptance(
+        std_normal, shifted_normal, GaussianRandomWalk(1.2), np.zeros(1), 6000, rng
+    )
+    x = chain[1500:]
+    assert abs(x.mean()) < 0.15
+    assert abs(x.var() - 1.0) < 0.25
+
+
+def test_mlda_three_levels_targets_fine():
+    rng = np.random.default_rng(2)
+    coarse0 = lambda t: float(-0.6 * np.sum((np.asarray(t) - 0.5) ** 2))
+    coarse1 = lambda t: float(-0.45 * np.sum((np.asarray(t) - 0.2) ** 2))
+    s = MLDASampler([coarse0, coarse1, std_normal], GaussianRandomWalk(1.0), [4, 3])
+    chain = s.sample(np.zeros(2), 2500, rng)
+    x = chain[600:]
+    assert np.all(np.abs(x.mean(0)) < 0.2)
+    assert np.all(np.abs(x.var(0) - 1.0) < 0.3)
+
+
+def test_mlda_eval_counts_decrease_up_hierarchy():
+    """Paper Table 1: coarse levels absorb the bulk of evaluations."""
+    rng = np.random.default_rng(3)
+    s = MLDASampler(
+        [shifted_normal, std_normal], GaussianRandomWalk(1.0), [5]
+    )
+    s.sample(np.zeros(2), 300, rng)
+    t = s.stats_table()
+    assert t[0]["n_evals"] > 3 * t[1]["n_evals"]
+
+
+def test_mlda_density_cache_prevents_recomputation():
+    calls = {"n": 0}
+
+    def counted_fine(t):
+        calls["n"] += 1
+        return std_normal(t)
+
+    rng = np.random.default_rng(4)
+    s = MLDASampler([shifted_normal, counted_fine], GaussianRandomWalk(1.0), [3])
+    s.sample(np.zeros(2), 100, rng)
+    # fine evals == recorded count (cache hit on re-entry states)
+    assert calls["n"] == s.levels[1].n_evals
+
+
+def test_randomized_subchain_lengths():
+    rng = np.random.default_rng(5)
+    s = MLDASampler([shifted_normal, std_normal], GaussianRandomWalk(1.0), [4])
+    lengths = {s._draw_subchain_length(1, rng) for _ in range(200)}
+    assert lengths == set(range(1, 8))  # uniform on {1..2n-1}, n=4
+
+
+def test_adaptive_metropolis_adapts():
+    rng = np.random.default_rng(6)
+    prop = AdaptiveMetropolis(dim=2, adapt_start=50)
+    target = lambda t: float(-0.5 * (t[0] ** 2 / 4.0 + t[1] ** 2 * 4.0))
+    chain, _, _ = metropolis_hastings(
+        target, prop, np.zeros(2), 2000, rng, adapt=True
+    )
+    assert prop._n > 0
+    # adapted covariance should reflect the anisotropy (var_x > var_y)
+    assert prop._cov[0, 0] > prop._cov[1, 1]
+
+
+def test_pcn_proposal_dimension_robust():
+    rng = np.random.default_rng(7)
+    d = 20
+    prop = PCNProposal(beta=0.3)
+    chain, _, stats = metropolis_hastings(
+        lambda t: float(-0.5 * np.sum(t**2)) * 0.0,  # likelihood=const, prior=N(0,1)
+        prop,
+        np.zeros(d),
+        500,
+        rng,
+    )
+    assert stats.acceptance_rate > 0.9  # pCN accepts const-likelihood at rate 1
+
+
+def test_sampler_checkpoint_roundtrip(tmp_path):
+    rng = np.random.default_rng(8)
+    s = MLDASampler([shifted_normal, std_normal], GaussianRandomWalk(1.0), [3])
+    chain = s.sample(np.zeros(2), 50, rng)
+    path = str(tmp_path / "sampler.json")
+    save_sampler(path, s, rng, theta=chain[-1], step=50)
+
+    s2 = MLDASampler([shifted_normal, std_normal], GaussianRandomWalk(1.0), [3])
+    info = load_sampler(path, s2)
+    assert info["step"] == 50
+    assert np.allclose(info["theta"], chain[-1])
+    assert s2.levels[1].n_evals == s.levels[1].n_evals
+    # restored rng continues identically
+    r_a = rng.standard_normal(3)
+    r_b = info["rng"].standard_normal(3)
+    assert np.allclose(r_a, r_b)

@@ -1,0 +1,131 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import threading
+import time
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+
+from repro.core.balancer import LoadBalancer, Server
+from repro.core.gp import GPParams, matern52
+from repro.models.chunked_attention import attention_chunked
+from repro.kernels.flash_attention.ref import attention_ref
+
+FAST = settings(
+    max_examples=15,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+@FAST
+@given(
+    n_servers=st.integers(1, 4),
+    durations=st.lists(st.floats(0.0, 0.004), min_size=1, max_size=20),
+    fail_mask=st.lists(st.booleans(), min_size=0, max_size=4),
+)
+def test_balancer_never_loses_or_duplicates(n_servers, durations, fail_mask):
+    """Every request completes exactly once with the right answer, as long
+    as at least one live server exists (the paper's FCFS guarantee)."""
+    fail_mask = (fail_mask + [False] * n_servers)[:n_servers]
+    if all(fail_mask):
+        fail_mask[0] = False  # keep one live server
+
+    def mk(fails):
+        def fn(x):
+            if fails:
+                raise RuntimeError("boom")
+            time.sleep(0.0005)
+            return ("ok", x)
+
+        return fn
+
+    lb = LoadBalancer(
+        [Server(mk(f), name=f"s{i}") for i, f in enumerate(fail_mask)],
+        max_retries=n_servers + 1,
+    )
+    reqs = [lb.submit_async(i) for i in range(len(durations))]
+    results = [lb.result(r, timeout=30) for r in reqs]
+    assert results == [("ok", i) for i in range(len(durations))]
+    done = sum(s.stats.n_requests for s in lb.servers)
+    assert done == len(durations)  # no duplicates on the success path
+
+
+@FAST
+@given(
+    n=st.integers(2, 24),
+    d=st.integers(1, 5),
+    ls=st.floats(0.1, 3.0),
+    scale=st.floats(0.1, 4.0),
+    seed=st.integers(0, 2**16),
+)
+def test_matern_kernel_is_psd_and_bounded(n, d, ls, scale, seed):
+    x = jax.random.normal(jax.random.key(seed), (n, d))
+    p = GPParams(
+        jnp.full((d,), np.log(ls)), jnp.asarray(np.log(scale)), jnp.zeros(())
+    )
+    k = np.asarray(matern52(x, x, p), dtype=np.float64)
+    assert np.all(np.isfinite(k))
+    assert np.all(k <= scale + 1e-5)  # k(x,x) is the max
+    eig = np.linalg.eigvalsh((k + k.T) / 2)
+    assert eig.min() > -1e-4 * scale
+
+
+@FAST
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 4),
+    s=st.sampled_from([16, 48, 64]),
+    dd=st.sampled_from([8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_chunked_attention_matches_oracle(b, h, s, dd, causal, seed):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (b, h, s, dd))
+    k = jax.random.normal(ks[1], (b, h, s, dd))
+    v = jax.random.normal(ks[2], (b, h, s, dd))
+    got = attention_chunked(q, k, v, causal=causal, block_k=16)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-5)
+
+
+@FAST
+@given(
+    amp=st.floats(0.5, 20.0),
+    x0=st.floats(-180.0, 180.0),
+    y0=st.floats(-180.0, 180.0),
+)
+def test_swe_positivity_and_finiteness(amp, x0, y0):
+    """Water depth stays >= 0 and finite for any admissible source."""
+    from repro.swe import TohokuScenario
+    from repro.swe.solver import SWEState, stable_dt, step
+
+    sc = TohokuScenario(nx=24, ny=24, t_end=600.0, amplitude=amp)
+    cfg, b = sc.cfg, sc.bathymetry()
+    h = jnp.maximum(jnp.maximum(-b, 0.0) + sc.displacement(jnp.array([x0, y0])), 0.0)
+    stt = SWEState(h, jnp.zeros_like(h), jnp.zeros_like(h))
+    dt = stable_dt(cfg, float(h.max()))
+    for _ in range(10):
+        stt = step(stt, b, cfg, dt)
+    assert float(stt.h.min()) >= 0.0
+    assert bool(jnp.all(jnp.isfinite(stt.h)))
+
+
+@FAST
+@given(
+    seed=st.integers(0, 2**16),
+    n_steps=st.integers(5, 40),
+)
+def test_mh_chain_logp_never_nan(seed, n_steps):
+    from repro.core import GaussianRandomWalk, metropolis_hastings
+
+    rng = np.random.default_rng(seed)
+    banana = lambda t: float(-0.5 * (t[0] ** 2 + (t[1] - t[0] ** 2) ** 2))
+    chain, logps, _ = metropolis_hastings(
+        banana, GaussianRandomWalk(0.7), np.zeros(2), n_steps, rng
+    )
+    assert np.all(np.isfinite(logps))
+    assert chain.shape == (n_steps, 2)

@@ -1,0 +1,104 @@
+"""Sharding policy unit tests (no multi-device needed — pure spec logic)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES
+
+
+class FakeMesh:
+    """Duck-typed mesh: ShardingPolicy only reads .shape and .axis_names."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(self.shape)
+
+
+def _policy(pure_dp=False, shape=(("data", 16), ("model", 16))):
+    from repro.runtime.sharding import ShardingPolicy
+
+    mesh = FakeMesh(shape)
+    if pure_dp:
+        return ShardingPolicy(mesh=mesh, dp_axes=("data", "model"), model_axis=None)
+    return ShardingPolicy(mesh=mesh, dp_axes=("data",))
+
+
+def test_shard_if_divisibility():
+    p = _policy()
+    assert p.shard_if(32, "model") == "model"
+    assert p.shard_if(14, "model") is None
+    assert p.shard_if(0, "model") == "model"  # 0 % 16 == 0 (degenerate)
+
+
+def test_batch_axes_fallback_chain():
+    p = _policy(pure_dp=True)
+    assert p.batch_axes(256) == ("data", "model")
+    assert p.batch_axes(128) == ("data",)  # drops 'model'
+    assert p.batch_axes(7) is None
+
+
+def test_param_spec_tp_rules():
+    from repro.runtime.sharding import param_spec
+
+    p = _policy()
+
+    class Leaf:
+        def __init__(self, shape):
+            self.shape = shape
+
+    # embed (V, d): vocab on model, d on dp
+    spec = param_spec(p, [_K("embed")], Leaf((32000, 4096)))
+    assert spec == P("model", ("data",))
+    # mlp w_up (L, d, ff): ff on model, d on dp
+    spec = param_spec(p, [_K("blocks"), _K("mlp"), _K("w_up")], Leaf((32, 4096, 14336)))
+    assert spec == P(None, ("data",), "model")
+    # wo (L, heads*hd, d): contract dim on model, d_model on dp
+    spec = param_spec(p, [_K("blocks"), _K("attn"), _K("wo")], Leaf((32, 4096, 4096)))
+    assert spec == P(None, "model", ("data",))
+    # norms replicate
+    spec = param_spec(p, [_K("ln1")], Leaf((4096,)))
+    assert spec == P(None)
+    # indivisible out dim falls back to replication; FSDP in-dim kept
+    spec = param_spec(p, [_K("blocks"), _K("attn"), _K("wq")], Leaf((24, 896, 897)))
+    assert spec == P(None, ("data",), None)
+
+
+def test_param_spec_pure_dp_largest_dim():
+    from repro.runtime.sharding import param_spec
+
+    p = _policy(pure_dp=True)
+
+    class Leaf:
+        def __init__(self, shape):
+            self.shape = shape
+
+    spec = param_spec(p, [_K("blocks"), _K("mlp"), _K("w_up")], Leaf((32, 896, 4864)))
+    # 4864 % 256 = 0 -> largest divisible dim sharded over all axes
+    assert spec == P(None, None, ("data", "model"))
+
+
+def test_choose_policy_families():
+    from repro.runtime.sharding import choose_policy
+
+    mesh = FakeMesh((("data", 16), ("model", 16)))
+    # small dense -> pure DP for training
+    pol = choose_policy(ARCHS["qwen2-0.5b"], SHAPES["train_4k"], mesh)
+    assert pol.model_axis is None
+    # big + divisible heads + no MoE -> TP
+    pol = choose_policy(ARCHS["nemotron-4-340b"], SHAPES["train_4k"], mesh)
+    assert pol.model_axis == "model" and pol.seq_parallel
+    # MoE with E % 16 != 0 -> pure DP even at 141B (measured; §Perf)
+    pol = choose_policy(ARCHS["mixtral-8x22b"], SHAPES["train_4k"], mesh)
+    assert pol.model_axis is None
+    # decode always TP-side
+    pol = choose_policy(ARCHS["qwen2-0.5b"], SHAPES["decode_32k"], mesh)
+    assert pol.model_axis == "model"
+
+
+class _K:
+    def __init__(self, key):
+        self.key = key
+
+    def __repr__(self):
+        return self.key

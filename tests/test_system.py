@@ -1,0 +1,38 @@
+"""System-level integration: the whole stack importable + cohesive."""
+import importlib
+
+import pytest
+
+
+@pytest.mark.parametrize(
+    "mod",
+    [
+        "repro.core", "repro.swe", "repro.models", "repro.configs",
+        "repro.runtime", "repro.data", "repro.optim", "repro.checkpoint",
+        "repro.kernels.matern.ops", "repro.kernels.flash_attention.ops",
+        "repro.kernels.swe_flux.ops", "repro.launch.mesh", "repro.launch.hlo_cost",
+    ],
+)
+def test_imports(mod):
+    importlib.import_module(mod)
+
+
+def test_all_archs_registered():
+    from repro.configs import ARCHS
+
+    assert len(ARCHS) == 10
+    for cfg in ARCHS.values():
+        r = cfg.reduced()
+        assert r.d_model <= 128 and r.vocab <= 512
+
+
+def test_shape_grid_covers_40_cells():
+    from repro.configs import ARCHS, SHAPES, shape_applicable
+
+    total = len(ARCHS) * len(SHAPES)
+    assert total == 40
+    runnable = sum(
+        shape_applicable(a, s)[0] for a in ARCHS.values() for s in SHAPES.values()
+    )
+    # long_500k runs only for ssm/hybrid/SWA archs (DESIGN.md §4)
+    assert runnable == 33
