@@ -6,18 +6,32 @@ three-level model hierarchy whose service times span orders of magnitude
 the benchmark minutes-long), driven by parallel MLDA chains with real
 inter-level dependencies.  Reports the Fig. 9 idle-time statistics and the
 Fig. 8 timeline (as CSV rows).
+
+Since the scheduling-policy refactor this runs the workload once per
+registered policy (``fifo`` | ``round_robin`` | ``least_loaded`` |
+``power_of_two`` | ``cost_aware``), prints a per-policy idle-time table,
+verifies zero leaked threads after ``shutdown()``, and writes a JSON
+summary (``BENCH_balancer.json``) so future PRs can track the perf
+trajectory per policy.
 """
 from __future__ import annotations
 
+import json
+import os
+import threading
 import time
 from typing import Dict, List
 
 import numpy as np
 
-from repro.core import GaussianRandomWalk, MLDASampler
+from repro.core import GaussianRandomWalk, MLDASampler, available_policies
 from repro.core.balancer import LoadBalancer, Server
 from repro.core.mlda import BalancedDensity
 
+JSON_PATH = os.environ.get(
+    "BENCH_BALANCER_JSON",
+    os.path.join(os.path.dirname(__file__), "BENCH_balancer.json"),
+)
 
 # Scaled per-level service times [s] (paper: 0.03 / 143 / 3071 s).
 LEVEL_COST = {0: 0.0003, 1: 0.02, 2: 0.2}
@@ -32,15 +46,20 @@ def make_level_fn(level: int, theta_shift: float):
     return fn
 
 
-def run(n_chains: int = 5, n_fine: int = 8) -> Dict[str, object]:
-    servers = [
+def make_servers() -> List[Server]:
+    return [
         Server(make_level_fn(0, 0.05), name="gp-0", capacity_tags=("level0",)),
         Server(make_level_fn(1, 0.02), name="coarse-0", capacity_tags=("level1",)),
         Server(make_level_fn(1, 0.02), name="coarse-1", capacity_tags=("level1",)),
         Server(make_level_fn(2, 0.0), name="fine-0", capacity_tags=("level2",)),
         Server(make_level_fn(2, 0.0), name="fine-1", capacity_tags=("level2",)),
     ]
-    lb = LoadBalancer(servers)
+
+
+def run(n_chains: int = 5, n_fine: int = 8, policy: str = "fifo") -> Dict[str, object]:
+    baseline_threads = threading.active_count()
+    servers = make_servers()
+    lb = LoadBalancer(servers, policy=policy)
 
     def log_like(resid):
         return -0.5 * float(np.sum(np.asarray(resid) ** 2)) / 0.25
@@ -56,8 +75,6 @@ def run(n_chains: int = 5, n_fine: int = 8) -> Dict[str, object]:
         s = MLDASampler(dens, GaussianRandomWalk(0.5), [6, 3])
         return s.sample(np.zeros(2), n_fine, np.random.default_rng(seed))
 
-    import threading
-
     t0 = time.monotonic()
     threads, results = [], [None] * n_chains
     for c in range(n_chains):
@@ -70,7 +87,10 @@ def run(n_chains: int = 5, n_fine: int = 8) -> Dict[str, object]:
 
     s = lb.summary()
     busy = sum(s["per_server_uptime"].values())
+    lb.shutdown()
+    leaked = threading.active_count() - baseline_threads
     return {
+        "policy": policy,
         "wall_s": wall,
         "mean_idle_s": s["mean_idle_s"],
         "p50_idle_s": s["p50_idle_s"],
@@ -79,18 +99,41 @@ def run(n_chains: int = 5, n_fine: int = 8) -> Dict[str, object]:
         "n_requests": s["n_requests"],
         "pool_utilization": busy / (wall * len(servers)),
         "timeline_rows": len(lb.timeline()),
+        "leaked_threads": leaked,
     }
 
 
 def main() -> List[str]:
-    r = run()
+    results = {p: run(policy=p) for p in available_policies()}
+    base = results["fifo"]
+    # Back-compat rows (fifo is the paper-faithful baseline) ...
     rows = [
-        f"balancer_mean_idle,{r['mean_idle_s'] * 1e6:.1f},us (paper: ~1e3 us)",
-        f"balancer_p99_idle,{r['p99_idle_s'] * 1e6:.1f},us",
-        f"balancer_max_idle,{r['max_idle_s'] * 1e6:.1f},us (paper outliers ~1e5 us)",
-        f"balancer_requests,{r['n_requests']},count",
-        f"balancer_pool_utilization,{r['pool_utilization'] * 100:.1f},%",
+        f"balancer_mean_idle,{base['mean_idle_s'] * 1e6:.1f},us (paper: ~1e3 us)",
+        f"balancer_p99_idle,{base['p99_idle_s'] * 1e6:.1f},us",
+        f"balancer_max_idle,{base['max_idle_s'] * 1e6:.1f},us (paper outliers ~1e5 us)",
+        f"balancer_requests,{base['n_requests']},count",
+        f"balancer_pool_utilization,{base['pool_utilization'] * 100:.1f},%",
     ]
+    # ... plus the per-policy idle-time table.
+    for p, r in results.items():
+        rows.append(f"balancer_mean_idle[{p}],{r['mean_idle_s'] * 1e6:.1f},us")
+        rows.append(f"balancer_p99_idle[{p}],{r['p99_idle_s'] * 1e6:.1f},us")
+        rows.append(f"balancer_wall[{p}],{r['wall_s']:.2f},s")
+        rows.append(f"balancer_leaked_threads[{p}],{r['leaked_threads']},count")
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(
+            {
+                "benchmark": "balancer",
+                "workload": "sec6.2-scaled",
+                "unit": "seconds",
+                "policies": results,
+            },
+            f,
+            indent=2,
+            sort_keys=True,
+        )
+    rows.append(f"balancer_json,{JSON_PATH},path")
     return rows
 
 

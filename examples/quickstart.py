@@ -15,12 +15,11 @@ import numpy as np
 from repro.core import (
     GaussianRandomWalk,
     JaxModel,
-    LoadBalancer,
-    MLDASampler,
     Server,
+    available_policies,
     summarize_chain,
 )
-from repro.core.mlda import BalancedDensity
+from repro.core.mlda import balanced_mlda
 from repro.core.mlda_jax import run_chains
 
 
@@ -34,27 +33,26 @@ def main():
     )
 
     # --- persistent server pool + balancer (paper Section 2) ----------------
-    lb = LoadBalancer(
-        [
-            Server(coarse, name="coarse-0", capacity_tags=("level0",)),
-            Server(fine, name="fine-0", capacity_tags=("level1",)),
-            Server(fine, name="fine-1", capacity_tags=("level1",)),
-        ]
-    )
+    # Scheduling is pluggable (DESIGN.md §3): 'fifo' is the paper-faithful
+    # Algorithm 1; swap the string to explore the rest of the registry.
+    print("scheduling policies available:", ", ".join(available_policies()))
+    servers = [
+        Server(coarse, name="coarse-0", capacity_tags=("level0",)),
+        Server(fine, name="fine-0", capacity_tags=("level1",)),
+        Server(fine, name="fine-1", capacity_tags=("level1",)),
+    ]
 
     log_like = lambda obs: -0.5 * float(np.sum((np.asarray(obs) - y_obs) ** 2)) / 0.1
     log_prior = lambda t: 0.0 if np.all(np.abs(t) < 10) else float("-inf")
 
-    dens = [
-        BalancedDensity(lb, "level0", log_like, log_prior),
-        BalancedDensity(lb, "level1", log_like, log_prior),
-    ]
-
     # --- MLDA through the balancer (paper Section 5) -------------------------
     t0 = time.time()
-    sampler = MLDASampler(dens, GaussianRandomWalk(0.4), [5])
+    sampler, lb = balanced_mlda(
+        servers, log_like, log_prior, GaussianRandomWalk(0.4), [5],
+        policy="fifo", batchable_levels=(),
+    )
     chain = sampler.sample(np.zeros(2), 100, np.random.default_rng(0))
-    print(f"MLDA via balancer: {time.time() - t0:.1f}s")
+    print(f"MLDA via balancer (policy={lb.policy.name}): {time.time() - t0:.1f}s")
     print("posterior summary:", summarize_chain(chain[20:]))
     for row in sampler.stats_table():
         print(
@@ -63,6 +61,7 @@ def main():
         )
     s = lb.summary()
     print(f"balancer idle: mean={s['mean_idle_s'] * 1e3:.2f}ms p99={s['p99_idle_s'] * 1e3:.2f}ms")
+    lb.shutdown()  # joins dispatcher + workers; thread count back to baseline
 
     # --- vectorised lockstep MLDA (beyond paper, DESIGN.md §2) ---------------
     t0 = time.time()

@@ -17,7 +17,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.tohoku_mlda import CONFIGS
-from repro.core import GaussianRandomWalk, LoadBalancer, MLDASampler, Server
+from repro.core import (
+    GaussianRandomWalk,
+    LoadBalancer,
+    MLDASampler,
+    Server,
+    available_policies,
+)
 from repro.core.diagnostics import telescoping_estimate, variance_reduction_check
 from repro.core.mlda import BalancedDensity
 from repro.swe import TohokuScenario, make_hierarchy, train_level0_gp
@@ -27,9 +33,16 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="cpu", choices=list(CONFIGS))
     ap.add_argument("--chains", type=int, default=0, help="override chain count")
+    ap.add_argument(
+        "--policy",
+        default="",
+        choices=[""] + available_policies(),
+        help="scheduling policy (default: the workload's balancer_policy)",
+    )
     args = ap.parse_args()
     w = CONFIGS[args.workload]
     n_chains = args.chains or w.n_chains
+    policy = args.policy or w.balancer_policy
 
     print(f"[1/4] building {w.name} hierarchy "
           f"(coarse {w.coarse_grid}, fine {w.fine_grid})")
@@ -44,7 +57,8 @@ def main():
     gp = train_level0_gp(f_coarse, prob, n_train=w.gp_train_points, steps=w.gp_opt_steps)
     print(f"      {time.time() - t0:.1f}s")
 
-    print(f"[3/4] MLDA x {n_chains} chains via the load balancer")
+    print(f"[3/4] MLDA x {n_chains} chains via the load balancer "
+          f"(policy={policy})")
     servers = [
         Server(lambda t: gp(jnp.asarray(t)), name="gp-0", capacity_tags=("level0",)),
     ]
@@ -58,7 +72,7 @@ def main():
             Server(lambda t: f_fine(jnp.asarray(t)), name=f"fine-{i}",
                    capacity_tags=("level2",))
         )
-    lb = LoadBalancer(servers)
+    lb = LoadBalancer(servers, policy=policy)
 
     def make_sampler():
         dens = [
@@ -112,8 +126,10 @@ def main():
           f"{variance_reduction_check(sample_sets)}")
 
     s = lb.summary()
-    print(f"      balancer idle (Fig. 9): mean={s['mean_idle_s'] * 1e3:.2f}ms "
+    print(f"      balancer idle (Fig. 9, policy={policy}): "
+          f"mean={s['mean_idle_s'] * 1e3:.2f}ms "
           f"p99={s['p99_idle_s'] * 1e3:.1f}ms max={s['max_idle_s'] * 1e3:.1f}ms")
+    lb.shutdown()  # joins the dispatcher + worker pool; no leaked threads
 
     # Fig. 6 analogue: GP over the full probe-0 time series.
     print("      fitting Fig. 6 time-series GP (probe 21418 analogue)")

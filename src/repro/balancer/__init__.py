@@ -1,0 +1,52 @@
+"""Dynamic load balancer package (paper Section 2, Algorithm 1).
+
+Layout (DESIGN.md §2-3):
+
+* :mod:`repro.balancer.types`      — ``Server`` / ``Request`` value types;
+* :mod:`repro.balancer.policies`   — pluggable :class:`SchedulingPolicy`
+  strategies behind a name registry (``fifo`` is the paper-faithful
+  default; ``round_robin`` / ``least_loaded`` / ``power_of_two`` /
+  ``cost_aware`` explore the scheme families of psim and Gmeiner et al.);
+* :mod:`repro.balancer.dispatcher` — the event-driven core: one dispatch
+  loop + a fixed worker pool (no thread-per-request);
+* :mod:`repro.balancer.telemetry`  — idle-time/timeline bookkeeping and
+  the runtime EWMA cost model, behind its own lock.
+
+``repro.core.balancer`` re-exports this package for backward compatibility.
+"""
+from .dispatcher import LoadBalancer
+from .policies import (
+    CostAwarePolicy,
+    FifoPolicy,
+    LeastLoadedPolicy,
+    POLICIES,
+    PolicyContext,
+    PowerOfTwoPolicy,
+    RoundRobinPolicy,
+    SchedulingPolicy,
+    available_policies,
+    create_policy,
+    register_policy,
+)
+from .telemetry import Telemetry
+from .types import Request, Server, ServerDiedError, ServerStats
+
+__all__ = [
+    "CostAwarePolicy",
+    "FifoPolicy",
+    "LeastLoadedPolicy",
+    "LoadBalancer",
+    "POLICIES",
+    "PolicyContext",
+    "PowerOfTwoPolicy",
+    "Request",
+    "RoundRobinPolicy",
+    "SchedulingPolicy",
+    "Server",
+    "ServerDiedError",
+    "ServerStats",
+    "Telemetry",
+    "available_policies",
+    "create_policy",
+    "register_policy",
+]

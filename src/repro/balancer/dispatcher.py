@@ -1,0 +1,432 @@
+"""Event-driven dispatcher core (paper Algorithm 1, engine-ified).
+
+The seed implementation ran Algorithm 1's body on one OS thread *per
+request* (``submit_async`` spawned a ``threading.Thread`` each call —
+thousands of threads per MLDA run) and leaked a waiter thread for every
+request coalesced by batched dispatch.  This core replaces that with:
+
+* a single **dispatch loop** thread owning the queue/condition-variable
+  pair of Algorithm 1: it sleeps until work + a free server coexist, asks
+  the :class:`~repro.balancer.policies.SchedulingPolicy` for the next
+  (request, server) pair, marks the server busy, and hands the pair to
+* a fixed **worker pool** (one slot per server by default — a server runs
+  one request at a time, so more would be idle) that executes the handler,
+  books telemetry, frees the server and notifies the dispatcher.
+
+The paper's design points survive intact: one persistent pool for the
+whole run, FIFO arrival order via an explicit queue under a mutex,
+event-driven wakeup via condition variables (no polling), zero assumptions
+about task runtimes.  What changed is purely mechanical: client threads no
+longer *are* the scheduler, they just enqueue and wait on the request's
+completion event.
+
+``shutdown()`` joins every thread it started, so the process thread count
+returns to its pre-balancer baseline — verified in tests.  See DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .policies import PolicyContext, SchedulingPolicy, create_policy
+from .telemetry import Telemetry
+from .types import Request, Server, ServerDiedError
+
+
+class LoadBalancer:
+    """Algorithm 1, as a thread-safe in-process dispatcher.
+
+    Clients call :meth:`submit` (blocking, like the paper's HTTP round trip)
+    or :meth:`submit_async` from as many threads as they like; Algorithm 1's
+    ``parallel for`` is simply many client threads calling in.
+
+    ``policy`` selects the scheduling strategy by registry name (``fifo``,
+    ``round_robin``, ``least_loaded``, ``power_of_two``, ``cost_aware``) or
+    accepts a :class:`SchedulingPolicy` instance.  The default ``fifo``
+    reproduces the seed/paper dispatch order exactly.
+    """
+
+    def __init__(
+        self,
+        servers: Sequence[Server],
+        *,
+        policy: "str | SchedulingPolicy" = "fifo",
+        max_retries: int = 2,
+        hedge_quantile: Optional[float] = None,
+        batch_window_s: float = 0.0,
+        max_batch: int = 256,
+        max_workers: Optional[int] = None,
+    ) -> None:
+        self._servers: List[Server] = list(servers)
+        self._mutex = threading.Lock()
+        self._cv = threading.Condition(self._mutex)
+        self._queue: deque[Request] = deque()
+        self._telemetry = Telemetry()
+        self._policy = create_policy(policy)
+        self._ctx = PolicyContext(
+            servers=self._servers, telemetry=self._telemetry, now=time.monotonic
+        )
+        self.max_retries = max_retries
+        self.hedge_quantile = hedge_quantile
+        self.batch_window_s = batch_window_s
+        self.max_batch = max_batch
+        self.max_workers = max_workers
+        self._shutdown = False
+        self._started = False
+        self._unservable_dirty = False  # set when a server dies / retires
+        self._dispatcher: Optional[threading.Thread] = None
+        self._workers: List[threading.Thread] = []
+        self._work: deque[Tuple[Request, Server]] = deque()
+        self._work_cv = threading.Condition()
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def policy(self) -> SchedulingPolicy:
+        return self._policy
+
+    @property
+    def telemetry(self) -> Telemetry:
+        return self._telemetry
+
+    @property
+    def servers(self) -> List[Server]:
+        return list(self._servers)
+
+    def alive_servers(self) -> List[Server]:
+        return [s for s in self._servers if not s.dead]
+
+    # -- pool management (elastic resize; beyond paper) ----------------------
+    def add_server(self, server: Server) -> None:
+        with self._cv:
+            self._servers.append(server)
+            if self._started:
+                self._grow_workers_locked()
+            self._cv.notify_all()
+
+    def retire_server(self, name: str) -> None:
+        with self._cv:
+            for s in self._servers:
+                if s.name == name:
+                    s.dead = True
+            self._unservable_dirty = True
+            self._cv.notify_all()
+
+    # -- engine lifecycle ----------------------------------------------------
+    def _n_workers_wanted(self) -> int:
+        if self.max_workers is not None:
+            return max(1, self.max_workers)
+        return max(1, sum(1 for s in self._servers if not s.dead))
+
+    def _ensure_started_locked(self) -> None:
+        if self._started:
+            return
+        self._started = True
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="lb-dispatch", daemon=True
+        )
+        self._dispatcher.start()
+        self._grow_workers_locked()
+
+    def _grow_workers_locked(self) -> None:
+        while len(self._workers) < self._n_workers_wanted():
+            t = threading.Thread(
+                target=self._worker_loop,
+                name=f"lb-worker-{len(self._workers)}",
+                daemon=True,
+            )
+            self._workers.append(t)
+            t.start()
+
+    def shutdown(self) -> None:
+        """Stop accepting work, fail queued requests, join every thread.
+
+        After this returns the process thread count is back to its
+        pre-balancer baseline (no leaked dispatcher/worker threads).
+        In-flight requests finish; queued ones complete with an error.
+        """
+        with self._cv:
+            self._shutdown = True
+            self._cv.notify_all()
+        with self._work_cv:
+            self._work_cv.notify_all()
+        if self._dispatcher is not None and self._dispatcher is not threading.current_thread():
+            self._dispatcher.join()
+        for t in self._workers:
+            if t is not threading.current_thread():
+                t.join()
+        # Dispatcher exits before failing anything it hasn't seen; sweep the
+        # queue AND the worker hand-off deque (a pair pushed after the last
+        # worker exited would otherwise leave its client blocked forever).
+        with self._cv:
+            self._fail_queued_locked("balancer shut down")
+        with self._work_cv:
+            leftover, self._work = list(self._work), deque()
+        for req, server in leftover:
+            server.busy = False
+            req.error = RuntimeError("balancer shut down")
+            req._complete()
+
+    def __enter__(self) -> "LoadBalancer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, theta, *, tag: str = "", batchable: bool = False) -> Any:
+        """Blocking evaluation of one request (the paper's client call)."""
+        req = self.submit_async(theta, tag=tag, batchable=batchable)
+        return self.result(req)
+
+    def submit_async(self, theta, *, tag: str = "", batchable: bool = False) -> Request:
+        req = Request(
+            theta=theta, tag=tag, batchable=batchable, arrived_at=time.monotonic()
+        )
+        self._telemetry.record_arrival(req)
+        with self._cv:
+            if self._shutdown:
+                req.error = RuntimeError("balancer shut down")
+            elif not any(not s.dead and s.accepts(tag) for s in self._servers):
+                req.error = RuntimeError(f"no live server accepts tag '{tag}'")
+            else:
+                self._ensure_started_locked()
+                self._queue.append(req)  # queue.push(request[j])
+                self._cv.notify_all()
+                return req
+        req._complete()
+        return req
+
+    def result(self, req: Request, timeout: Optional[float] = None) -> Any:
+        if not req.done.wait(timeout):
+            raise TimeoutError("request did not complete in time")
+        if req.error is not None:
+            raise req.error
+        return req.result
+
+    # -- dispatch loop (Algorithm 1's scheduler half) ------------------------
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cv:  # mutex.lock()
+                while True:
+                    if self._shutdown:
+                        self._fail_queued_locked("balancer shut down")
+                        return
+                    if self._unservable_dirty:
+                        self._unservable_dirty = False
+                        self._fail_unservable_locked()
+                    pair = self._policy.select(self._queue, self._ctx)
+                    if pair is not None:
+                        break
+                    self._cv.wait()  # conditional_variable.wait(mutex)
+                req, server = pair
+                self._queue.remove(req)  # queue.pop() (FIFO head for our tag)
+                server.busy = True  # server.markBusy()
+            # mutex.unlock() — implicit; hand off to the worker pool.
+            with self._work_cv:
+                self._work.append((req, server))
+                self._work_cv.notify()
+
+    def _fail_unservable_locked(self) -> None:
+        """Fail queued requests whose tag no live server accepts.
+
+        Runs only after a server death/retirement (``_unservable_dirty``) —
+        servability never shrinks otherwise, and requests with an unservable
+        tag are rejected at submit time — so the dispatch hot path stays
+        O(policy.select) per wakeup.
+        """
+        servable: deque[Request] = deque()
+        while self._queue:
+            req = self._queue.popleft()
+            if any(not s.dead and s.accepts(req.tag) for s in self._servers):
+                servable.append(req)
+            else:
+                req.error = RuntimeError(
+                    f"no live server accepts tag '{req.tag}'"
+                )
+                req._complete()
+        self._queue.extend(servable)
+
+    def _fail_queued_locked(self, msg: str) -> None:
+        while self._queue:
+            req = self._queue.popleft()
+            req.error = RuntimeError(msg)
+            req._complete()
+
+    # -- worker pool (Algorithm 1's execution half) --------------------------
+    def _worker_loop(self) -> None:
+        while True:
+            with self._work_cv:
+                while not self._work:
+                    if self._shutdown:
+                        return
+                    self._work_cv.wait()
+                req, server = self._work.popleft()
+            self._execute(req, server)
+
+    def _execute(self, req: Request, server: Server) -> None:
+        req.dispatched_at = time.monotonic()
+        req.server = server.name
+        try:
+            if req.batchable and server.batch_fn is not None and self.batch_window_s > 0:
+                result = self._execute_batched(req, server)
+            else:
+                result = server.fn(req.theta)  # return server(request[j])
+        except Exception:  # noqa: BLE001 - any worker fault kills the server
+            self._telemetry.record_failure(server)
+            with self._cv:
+                server.dead = True
+                server.busy = False
+                self._unservable_dirty = True
+                self._cv.notify_all()
+            req.retries += 1
+            if req.retries > self.max_retries:
+                req.error = ServerDiedError(
+                    f"request failed after {req.retries} attempts"
+                )
+                req._complete()
+            else:
+                self._requeue(req)
+            return
+        req.completed_at = time.monotonic()
+        req.result = result
+        self._telemetry.record_completion(req, server)
+        with self._cv:  # reset busyness once done + notify_all()
+            server.busy = False
+            server.last_free_at = time.monotonic()
+            self._cv.notify_all()
+        req._complete()
+
+    def _requeue(self, req: Request) -> None:
+        with self._cv:
+            if not self._shutdown:
+                self._queue.append(req)  # re-enter Algorithm 1
+                # The server that failed this request may have been its only
+                # compatible one, and the dispatcher may already have consumed
+                # the death's dirty flag before we re-enqueued — re-arm it so
+                # the next wakeup re-checks servability instead of parking
+                # the request forever.
+                self._unservable_dirty = True
+                self._cv.notify_all()
+                return
+            req.error = RuntimeError("balancer shut down")
+        req._complete()
+
+    # -- micro-task batching (beyond paper) ----------------------------------
+    def _execute_batched(self, req: Request, server: Server):
+        """Coalesce queued batchable same-tag requests into one vmap call.
+
+        Coalesced requests are completed directly by this worker — unlike
+        the seed there is no per-request waiter thread left behind.
+        """
+        time.sleep(self.batch_window_s)
+        extra: List[Request] = []
+        with self._cv:
+            keep: deque[Request] = deque()
+            while self._queue and len(extra) < self.max_batch - 1:
+                r = self._queue.popleft()
+                if r.batchable and r.tag == req.tag:
+                    extra.append(r)
+                else:
+                    keep.append(r)
+            while keep:
+                self._queue.appendleft(keep.pop())
+        thetas = [req.theta] + [r.theta for r in extra]
+        now = time.monotonic()
+        for r in extra:
+            r.dispatched_at = now
+            r.server = server.name
+        try:
+            results = server.batch_fn(thetas)
+        except Exception:
+            # Coalesced members retry elsewhere — each burns one retry, so
+            # max_retries bounds them like any other request; the primary
+            # follows the normal failure path in _execute.
+            exhausted: List[Request] = []
+            with self._cv:
+                for r in reversed(extra):
+                    r.retries += 1
+                    if r.retries > self.max_retries:
+                        exhausted.append(r)
+                        continue
+                    r.dispatched_at = 0.0
+                    r.server = None
+                    self._queue.appendleft(r)
+                self._cv.notify_all()
+            for r in exhausted:
+                r.error = ServerDiedError(
+                    f"request failed after {r.retries} attempts"
+                )
+                r._complete()
+            raise
+        done = time.monotonic()
+        for r, res in zip(extra, list(results)[1:]):
+            r.result = res
+            r.completed_at = done
+            r._complete()
+        self._telemetry.record_batched(extra, server)
+        return results[0]
+
+    # -- straggler hedging (beyond paper) ------------------------------------
+    def runtime_quantile(self, tag: str, q: float) -> Optional[float]:
+        return self._telemetry.runtime_quantile(tag, q)
+
+    def submit_hedged(self, theta, *, tag: str = "") -> Any:
+        """Submit with straggler mitigation: if the primary exceeds the
+        ``hedge_quantile`` of past runtimes for this tag, launch a duplicate;
+        first completion wins, the loser is flagged ``hedged`` so idle-time
+        statistics never count the duplicated work — whichever copy wins."""
+        primary = self.submit_async(theta, tag=tag)
+        q = self.hedge_quantile or 0.95
+        deadline = self.runtime_quantile(tag, q)
+        if deadline is None:
+            return self.result(primary)
+        if primary.done.wait(timeout=deadline * 2.0):
+            return self.result(primary)
+        backup = self.submit_async(theta, tag=tag)
+        backup.hedged = True  # presumed loser until proven otherwise
+        first_done = threading.Event()  # set by whichever copy finishes first
+        primary.add_done_callback(lambda _r: first_done.set())
+        backup.add_done_callback(lambda _r: first_done.set())
+        first_done.wait()
+        for winner, loser in ((primary, backup), (backup, primary)):
+            if winner.done.is_set() and winner.error is None:
+                break
+        else:
+            # First finisher errored: wait out the surviving duplicate.
+            winner, loser = (
+                (backup, primary) if primary.done.is_set() else (primary, backup)
+            )
+        winner.hedged = False
+        loser.hedged = True
+        return self.result(winner)
+
+    # -- telemetry (paper Figs. 8 & 9) ---------------------------------------
+    def idle_times(self) -> List[float]:
+        """Queue delays of completed requests — the paper's Fig. 9 metric."""
+        return self._telemetry.idle_times()
+
+    def timeline(self) -> List[Dict[str, Any]]:
+        """Per-server busy intervals — the paper's Fig. 8 bar chart data."""
+        return self._telemetry.timeline(self._servers)
+
+    def summary(self) -> Dict[str, Any]:
+        return self._telemetry.summary(self._servers)
+
+    # -- checkpointing (paper §7 future work) --------------------------------
+    def checkpoint_queue(self) -> List[Dict[str, Any]]:
+        """Snapshot pending work: the arrival queue plus any (request,
+        server) pairs parked in the worker hand-off deque (possible when
+        ``max_workers`` is below the free-server count)."""
+        with self._mutex:
+            pending = [
+                {"theta": r.theta, "tag": r.tag, "batchable": r.batchable}
+                for r in self._queue
+            ]
+        with self._work_cv:
+            pending.extend(
+                {"theta": r.theta, "tag": r.tag, "batchable": r.batchable}
+                for r, _ in self._work
+            )
+        return pending

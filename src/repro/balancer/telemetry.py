@@ -1,0 +1,138 @@
+"""Idle-time / timeline / summary bookkeeping (paper Figs. 8 & 9).
+
+Extracted from the seed's ``LoadBalancer`` so that ``_history`` and
+``_runtimes`` are no longer mutated unlocked on worker threads: every
+mutation here happens under ``Telemetry``'s own lock, independent of the
+dispatcher's mutex, so recording a completion never contends with the
+dispatch hot path.
+
+Beyond the seed's raw runtime lists this also maintains exponentially
+weighted moving averages of service time per tag and per (server, tag) —
+the cost model consumed by the ``cost_aware`` scheduling policy
+(Gmeiner-style multilevel cost-aware scheduling; see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional, Sequence
+
+from .types import Request, Server
+
+EWMA_ALPHA = 0.2  # smoothing for the per-tag / per-(server, tag) cost model
+
+
+class Telemetry:
+    """Thread-safe request history + runtime statistics."""
+
+    def __init__(self, *, ewma_alpha: float = EWMA_ALPHA) -> None:
+        self._lock = threading.Lock()
+        self._history: List[Request] = []
+        self._runtimes: Dict[str, List[float]] = {}
+        self._tag_ewma: Dict[str, float] = {}
+        self._server_tag_ewma: Dict[tuple, float] = {}
+        self._server_busy_s: Dict[str, float] = {}
+        self._ewma_alpha = ewma_alpha
+
+    # -- recording (called by the dispatcher / workers) ----------------------
+    def record_arrival(self, req: Request) -> None:
+        with self._lock:
+            self._history.append(req)
+
+    def record_completion(self, req: Request, server: Server) -> None:
+        """Book a successful completion: server stats + runtime model."""
+        dt = req.completed_at - req.dispatched_at
+        with self._lock:
+            server.stats.busy_intervals.append((req.dispatched_at, req.completed_at))
+            server.stats.tags.append(req.tag)
+            server.stats.n_requests += 1
+            self._server_busy_s[server.name] = (
+                self._server_busy_s.get(server.name, 0.0) + dt
+            )
+            self._record_runtime_locked(req.tag, dt, server.name)
+
+    def record_batched(self, reqs: Sequence[Request], server: Server) -> None:
+        """Book the extra members of a coalesced batch (one fused solve)."""
+        with self._lock:
+            server.stats.n_requests += len(reqs)
+
+    def record_failure(self, server: Server) -> None:
+        with self._lock:
+            server.stats.n_failures += 1
+
+    def _record_runtime_locked(self, tag: str, dt: float, server: Optional[str]) -> None:
+        self._runtimes.setdefault(tag, []).append(dt)
+        a = self._ewma_alpha
+        prev = self._tag_ewma.get(tag)
+        self._tag_ewma[tag] = dt if prev is None else (1 - a) * prev + a * dt
+        if server is not None:
+            key = (server, tag)
+            prev = self._server_tag_ewma.get(key)
+            self._server_tag_ewma[key] = (
+                dt if prev is None else (1 - a) * prev + a * dt
+            )
+
+    # -- cost model reads (consumed by scheduling policies) ------------------
+    def tag_ewma(self, tag: str) -> Optional[float]:
+        with self._lock:
+            return self._tag_ewma.get(tag)
+
+    def server_tag_ewma(self, server: str, tag: str) -> Optional[float]:
+        with self._lock:
+            return self._server_tag_ewma.get((server, tag))
+
+    def tag_ewmas(self) -> Dict[str, float]:
+        with self._lock:
+            return dict(self._tag_ewma)
+
+    def server_busy_seconds(self, server: str) -> float:
+        with self._lock:
+            return self._server_busy_s.get(server, 0.0)
+
+    def runtime_quantile(self, tag: str, q: float) -> Optional[float]:
+        with self._lock:
+            xs = sorted(self._runtimes.get(tag, []))
+        if len(xs) < 4:
+            return None
+        idx = min(len(xs) - 1, int(q * len(xs)))
+        return xs[idx]
+
+    # -- reporting (paper Figs. 8 & 9) ---------------------------------------
+    def idle_times(self) -> List[float]:
+        """Queue delays of completed requests — the paper's Fig. 9 metric.
+
+        Hedge losers (``hedged`` flag, set on whichever duplicate lost the
+        race) are excluded so duplicated work does not skew the statistic.
+        """
+        with self._lock:
+            history = list(self._history)
+        return [
+            r.queue_delay
+            for r in history
+            if r.done.is_set() and r.error is None and not r.hedged
+        ]
+
+    def timeline(self, servers: Sequence[Server]) -> List[Dict[str, Any]]:
+        """Per-server busy intervals — the paper's Fig. 8 bar chart data."""
+        with self._lock:
+            rows = []
+            for s in servers:
+                for (a, b), tag in zip(s.stats.busy_intervals, s.stats.tags):
+                    rows.append({"server": s.name, "start": a, "end": b, "tag": tag})
+        return rows
+
+    def summary(self, servers: Sequence[Server]) -> Dict[str, Any]:
+        idles = self.idle_times()
+        idles_sorted = sorted(idles)
+        n = len(idles_sorted)
+        with self._lock:
+            per_server_uptime = {s.name: s.stats.uptime() for s in servers}
+            failures = sum(s.stats.n_failures for s in servers)
+        return {
+            "n_requests": n,
+            "mean_idle_s": sum(idles) / n if n else 0.0,
+            "p50_idle_s": idles_sorted[n // 2] if n else 0.0,
+            "p99_idle_s": idles_sorted[min(n - 1, int(0.99 * n))] if n else 0.0,
+            "max_idle_s": idles_sorted[-1] if n else 0.0,
+            "per_server_uptime": per_server_uptime,
+            "failures": failures,
+        }

@@ -1,0 +1,119 @@
+"""Shared value types of the balancer package: servers and requests.
+
+These are the paper's nouns (Section 2.2): a *server* is a persistent model
+endpoint with arrival/departure bookkeeping; a *request* is one forward-solve
+with the timestamps the paper records for Figs. 8-9.  They carry no
+scheduling logic — that lives in :mod:`repro.balancer.policies` — and no
+execution logic — that lives in :mod:`repro.balancer.dispatcher`.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+
+@dataclass
+class ServerStats:
+    """Arrival/departure bookkeeping, as recorded by the paper's servers.
+
+    Mutated only by :class:`repro.balancer.telemetry.Telemetry` (under its
+    lock); read freely for reporting.
+    """
+
+    busy_intervals: List[Tuple[float, float]] = field(default_factory=list)
+    tags: List[str] = field(default_factory=list)
+    n_requests: int = 0
+    n_failures: int = 0
+
+    def uptime(self) -> float:
+        return sum(b - a for a, b in self.busy_intervals)
+
+
+class Server:
+    """A persistent model server.
+
+    ``fn`` is the request handler (e.g. a :class:`repro.core.model.JaxModel`
+    or any callable).  ``capacity_tags`` restricts which request tags this
+    server accepts (mirrors heterogeneous pools: fine-PDE servers vs GP
+    servers).  Empty means 'accepts everything' — the paper's single-pool
+    round-robin default.
+    """
+
+    _ids = itertools.count()
+
+    def __init__(
+        self,
+        fn: Callable,
+        *,
+        name: Optional[str] = None,
+        capacity_tags: Sequence[str] = (),
+        batch_fn: Optional[Callable] = None,
+    ) -> None:
+        self.id = next(Server._ids)
+        self.name = name or f"server-{self.id}"
+        self.fn = fn
+        self.batch_fn = batch_fn
+        self.capacity_tags = frozenset(capacity_tags)
+        self.busy = False
+        self.dead = False
+        self.stats = ServerStats()
+        self.last_free_at: float = time.monotonic()
+
+    def accepts(self, tag: str) -> bool:
+        return (not self.capacity_tags) or (tag in self.capacity_tags)
+
+
+@dataclass(eq=False)  # identity equality: dataclass field == would compare
+class Request:        # numpy thetas ("truth value ambiguous" in queue.remove)
+    """A client request, with the timestamps the paper records."""
+
+    theta: Any
+    tag: str = ""
+    batchable: bool = False
+    arrived_at: float = 0.0
+    dispatched_at: float = 0.0
+    completed_at: float = 0.0
+    server: Optional[str] = None
+    retries: int = 0
+    result: Any = None
+    error: Optional[BaseException] = None
+    done: threading.Event = field(default_factory=threading.Event, repr=False)
+    hedged: bool = False
+
+    def __post_init__(self) -> None:
+        self._callbacks: List[Callable[["Request"], None]] = []
+        self._cb_lock = threading.Lock()
+
+    @property
+    def queue_delay(self) -> float:
+        """Time between arrival and dispatch — the paper's 'idle time'."""
+        return self.dispatched_at - self.arrived_at
+
+    @property
+    def service_time(self) -> float:
+        return self.completed_at - self.dispatched_at
+
+    # -- completion plumbing -------------------------------------------------
+    def add_done_callback(self, fn: Callable[["Request"], None]) -> None:
+        """Run ``fn(self)`` when the request completes (immediately if it
+        already has).  Used by hedging to wait on 'first of two'."""
+        with self._cb_lock:
+            if not self.done.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
+    def _complete(self) -> None:
+        """Set ``done`` and fire callbacks exactly once each."""
+        with self._cb_lock:
+            self.done.set()
+            callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            fn(self)
+
+
+class ServerDiedError(RuntimeError):
+    """A request exhausted its retries because its servers kept dying."""

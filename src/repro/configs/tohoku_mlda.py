@@ -30,6 +30,10 @@ class MLDAWorkloadConfig:
     servers_per_level: Dict[int, int] = field(
         default_factory=lambda: {0: 1, 1: 2, 2: 2}
     )
+    # scheduling policy (repro.balancer.policies registry): 'fifo' is the
+    # paper-faithful Algorithm 1 default; alternatives: 'round_robin',
+    # 'least_loaded', 'power_of_two', 'cost_aware'.
+    balancer_policy: str = "fifo"
 
 
 PAPER = MLDAWorkloadConfig(

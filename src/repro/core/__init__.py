@@ -1,5 +1,14 @@
 """The paper's contribution: dynamic load balancing for UQ + MLDA sampling."""
-from .balancer import LoadBalancer, Request, Server, ServerDiedError
+from .balancer import (
+    LoadBalancer,
+    Request,
+    SchedulingPolicy,
+    Server,
+    ServerDiedError,
+    available_policies,
+    create_policy,
+    register_policy,
+)
 from .diagnostics import (
     effective_sample_size,
     gelman_rubin,
@@ -19,7 +28,7 @@ from .mh import (
     mh_step,
 )
 from .mala import BalancedGradDensity, mala, mala_step
-from .mlda import BalancedDensity, MLDASampler, delayed_acceptance
+from .mlda import BalancedDensity, MLDASampler, balanced_mlda, delayed_acceptance
 from .model import JaxModel, LogDensityModel, Model, ModelInfo
 
 __all__ = [
@@ -38,9 +47,14 @@ __all__ = [
     "PCNProposal",
     "Proposal",
     "Request",
+    "SchedulingPolicy",
     "Server",
     "ServerDiedError",
+    "available_policies",
+    "balanced_mlda",
+    "create_policy",
     "delayed_acceptance",
+    "register_policy",
     "effective_sample_size",
     "fit_gp",
     "gelman_rubin",

@@ -1,400 +1,58 @@
-"""The paper's core contribution: a dynamic load balancer for UQ workloads.
+"""Backward-compatibility shim: the balancer now lives in ``repro.balancer``.
 
-Faithful port of Algorithm 1 (Section 2.2):
+The seed's 400-line monolith (queueing + policy + execution + telemetry in
+one class) was split into a package (DESIGN.md §2-3):
 
-    parallel for j = 0 .. N-1:
-        mutex.lock()
-        queue.push(request[j])
-        if free server exists:
-            server = getFreeServer(); request = queue.pop(); server.markBusy()
-            mutex.unlock()
-            return server(request)          # blocking; reset busyness once done
-        else:
-            conditional_variable.wait(mutex) # sleep; woken by notify_all()
-            goto 4
+* ``repro.balancer.types``      — ``Server`` / ``Request`` / ``ServerStats``;
+* ``repro.balancer.policies``   — pluggable ``SchedulingPolicy`` registry
+  (``fifo`` | ``round_robin`` | ``least_loaded`` | ``power_of_two`` |
+  ``cost_aware``);
+* ``repro.balancer.dispatcher`` — event-driven ``LoadBalancer`` core
+  (single dispatch loop + fixed worker pool, no thread-per-request);
+* ``repro.balancer.telemetry``  — Figs. 8-9 bookkeeping + runtime EWMAs.
 
-Design points preserved from the paper:
-  * one persistent pool of servers for the entire run (no per-request init);
-  * FIFO arrival order via an explicit queue under a mutex;
-  * event-driven wakeup via a condition variable (``notify_all`` whenever a
-    server is marked free) — no polling;
-  * zero assumptions about task runtimes or inter-task dependencies (the
-    client owns the dependency graph);
-  * idle-time telemetry equivalent to the paper's arrival/departure
-    timestamps (Section 6.2, Figs. 8-9).
+Existing imports keep working:
 
-Beyond-paper extensions (each individually switchable, all default-off so the
-baseline is paper-faithful; see DESIGN.md §2):
-  * fault tolerance: a server raising an exception is marked dead and the
-    request is transparently re-queued (up to ``max_retries``);
-  * straggler hedging: requests outstanding for longer than an adaptive
-    quantile of past runtimes are duplicated onto a free server, first
-    result wins (the paper's §7 'node utilization awareness' direction);
-  * micro-task batching: requests against the same server tagged batchable
-    are coalesced into a single vectorised evaluation (TPU-native);
-  * elastic pool resize: servers can be added/retired at runtime;
-  * checkpoint/restart of the pending queue (paper §7 future work).
+    from repro.core.balancer import LoadBalancer, Server
 """
 from __future__ import annotations
 
-import itertools
-import threading
-import time
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from repro.balancer import (  # noqa: F401 - re-exports
+    CostAwarePolicy,
+    FifoPolicy,
+    LeastLoadedPolicy,
+    LoadBalancer,
+    POLICIES,
+    PolicyContext,
+    PowerOfTwoPolicy,
+    Request,
+    RoundRobinPolicy,
+    SchedulingPolicy,
+    Server,
+    ServerDiedError,
+    ServerStats,
+    Telemetry,
+    available_policies,
+    create_policy,
+    register_policy,
+)
 
-
-# --------------------------------------------------------------------------
-# Server pool
-# --------------------------------------------------------------------------
-@dataclass
-class ServerStats:
-    """Arrival/departure bookkeeping, as recorded by the paper's servers."""
-
-    busy_intervals: List[Tuple[float, float]] = field(default_factory=list)
-    tags: List[str] = field(default_factory=list)
-    n_requests: int = 0
-    n_failures: int = 0
-
-    def uptime(self) -> float:
-        return sum(b - a for a, b in self.busy_intervals)
-
-
-class Server:
-    """A persistent model server.
-
-    ``fn`` is the request handler (e.g. a :class:`repro.core.model.JaxModel`
-    or any callable).  ``capacity_tags`` restricts which request tags this
-    server accepts (mirrors heterogeneous pools: fine-PDE servers vs GP
-    servers).  Empty means 'accepts everything' — the paper's single-pool
-    round-robin default.
-    """
-
-    _ids = itertools.count()
-
-    def __init__(
-        self,
-        fn: Callable,
-        *,
-        name: Optional[str] = None,
-        capacity_tags: Sequence[str] = (),
-        batch_fn: Optional[Callable] = None,
-    ) -> None:
-        self.id = next(Server._ids)
-        self.name = name or f"server-{self.id}"
-        self.fn = fn
-        self.batch_fn = batch_fn
-        self.capacity_tags = frozenset(capacity_tags)
-        self.busy = False
-        self.dead = False
-        self.stats = ServerStats()
-        self.last_free_at: float = time.monotonic()
-
-    def accepts(self, tag: str) -> bool:
-        return (not self.capacity_tags) or (tag in self.capacity_tags)
-
-
-@dataclass(eq=False)  # identity equality: dataclass field == would compare
-class Request:        # numpy thetas ("truth value ambiguous" in queue.remove)
-    """A client request, with the timestamps the paper records."""
-
-    theta: Any
-    tag: str = ""
-    batchable: bool = False
-    arrived_at: float = 0.0
-    dispatched_at: float = 0.0
-    completed_at: float = 0.0
-    server: Optional[str] = None
-    retries: int = 0
-    result: Any = None
-    error: Optional[BaseException] = None
-    done: threading.Event = field(default_factory=threading.Event, repr=False)
-    hedged: bool = False
-
-    @property
-    def queue_delay(self) -> float:
-        """Time between arrival and dispatch — the paper's 'idle time'."""
-        return self.dispatched_at - self.arrived_at
-
-    @property
-    def service_time(self) -> float:
-        return self.completed_at - self.dispatched_at
-
-
-class ServerDiedError(RuntimeError):
-    pass
-
-
-class LoadBalancer:
-    """Algorithm 1, as a thread-safe in-process dispatcher.
-
-    Clients call :meth:`submit` (blocking, like the paper's HTTP round trip)
-    or :meth:`submit_async` from as many threads as they like; Algorithm 1's
-    ``parallel for`` is simply many client threads calling in.
-    """
-
-    def __init__(
-        self,
-        servers: Sequence[Server],
-        *,
-        max_retries: int = 2,
-        hedge_quantile: Optional[float] = None,
-        batch_window_s: float = 0.0,
-        max_batch: int = 256,
-    ) -> None:
-        self._servers: List[Server] = list(servers)
-        self._mutex = threading.Lock()
-        self._cv = threading.Condition(self._mutex)
-        self._queue: deque[Request] = deque()
-        self._history: List[Request] = []
-        self._runtimes: Dict[str, List[float]] = {}
-        self.max_retries = max_retries
-        self.hedge_quantile = hedge_quantile
-        self.batch_window_s = batch_window_s
-        self.max_batch = max_batch
-        self._shutdown = False
-
-    # -- pool management (elastic resize; beyond paper) --------------------
-    def add_server(self, server: Server) -> None:
-        with self._cv:
-            self._servers.append(server)
-            self._cv.notify_all()
-
-    def retire_server(self, name: str) -> None:
-        with self._cv:
-            for s in self._servers:
-                if s.name == name:
-                    s.dead = True
-            self._cv.notify_all()
-
-    @property
-    def servers(self) -> List[Server]:
-        return list(self._servers)
-
-    def alive_servers(self) -> List[Server]:
-        return [s for s in self._servers if not s.dead]
-
-    # -- Algorithm 1 -------------------------------------------------------
-    def _get_free_server(self, tag: str) -> Optional[Server]:
-        # First-come-first-served across the pool; among free servers pick
-        # the least-recently-freed (round-robin-ish, as in the paper).
-        candidates = [s for s in self._servers if not s.busy and not s.dead and s.accepts(tag)]
-        if not candidates:
-            return None
-        return min(candidates, key=lambda s: s.last_free_at)
-
-    def _next_dispatchable(self) -> Optional[Tuple[Request, Server]]:
-        """Earliest queued request that a free server can serve.
-
-        With a homogeneous pool this is exactly the paper's FIFO head; with
-        heterogeneous capacity tags it additionally avoids head-of-line
-        blocking (a free GP server never idles behind a queued PDE request).
-        """
-        claimed: set = set()
-        for r in self._queue:
-            server = None
-            for s in sorted(
-                (s for s in self._servers if not s.busy and not s.dead and s.id not in claimed),
-                key=lambda s: s.last_free_at,
-            ):
-                if s.accepts(r.tag):
-                    server = s
-                    break
-            if server is not None:
-                return r, server
-            # r stays queued; requests behind it may still match other servers.
-        return None
-
-    def submit(self, theta, *, tag: str = "", batchable: bool = False) -> Any:
-        """Blocking evaluation of one request (the paper's client call)."""
-        req = self.submit_async(theta, tag=tag, batchable=batchable)
-        return self.result(req)
-
-    def submit_async(self, theta, *, tag: str = "", batchable: bool = False) -> Request:
-        req = Request(theta=theta, tag=tag, batchable=batchable, arrived_at=time.monotonic())
-        worker = threading.Thread(target=self._run_request, args=(req,), daemon=True)
-        with self._mutex:
-            self._history.append(req)
-        worker.start()
-        return req
-
-    def result(self, req: Request, timeout: Optional[float] = None) -> Any:
-        if not req.done.wait(timeout):
-            raise TimeoutError("request did not complete in time")
-        if req.error is not None:
-            raise req.error
-        return req.result
-
-    # The body of Algorithm 1 for one request (executed on a client thread).
-    def _run_request(self, req: Request) -> None:
-        while True:
-            with self._cv:  # mutex.lock()
-                self._queue.append(req)  # queue.push(request[j])
-                while True:  # point of entry after wakeup
-                    if self._shutdown:
-                        req.error = RuntimeError("balancer shut down")
-                        req.done.set()
-                        return
-                    if not any(
-                        not s.dead and s.accepts(req.tag) for s in self._servers
-                    ):
-                        self._queue.remove(req)
-                        req.error = RuntimeError(
-                            f"no live server accepts tag '{req.tag}'"
-                        )
-                        req.done.set()
-                        return
-                    nxt = self._next_dispatchable()
-                    if nxt is not None and nxt[0] is req:
-                        server = nxt[1]
-                        self._queue.remove(req)  # queue.pop() (FIFO head for our tag)
-                        server.busy = True  # server.markBusy()
-                        # Wake the new queue head in case more servers are free.
-                        self._cv.notify_all()
-                        break
-                    self._cv.wait()  # conditional_variable.wait(mutex)
-            # mutex.unlock() — implicit on exiting the with block.
-            try:
-                self._dispatch(req, server)  # return server(request[j])
-                return
-            except ServerDiedError:
-                req.retries += 1
-                if req.retries > self.max_retries:
-                    req.error = RuntimeError(
-                        f"request failed after {req.retries} attempts"
-                    )
-                    req.done.set()
-                    return
-                # fall through: re-enter Algorithm 1 and requeue.
-
-    def _dispatch(self, req: Request, server: Server) -> None:
-        req.dispatched_at = time.monotonic()
-        req.server = server.name
-        t0 = req.dispatched_at
-        try:
-            if req.batchable and server.batch_fn is not None and self.batch_window_s > 0:
-                result = self._dispatch_batched(req, server)
-            else:
-                result = server.fn(req.theta)
-        except Exception as exc:  # noqa: BLE001 - any worker fault
-            server.stats.n_failures += 1
-            server.dead = True
-            with self._cv:
-                server.busy = False
-                self._cv.notify_all()
-            raise ServerDiedError(str(exc)) from exc
-        req.completed_at = time.monotonic()
-        req.result = result
-        server.stats.busy_intervals.append((t0, req.completed_at))
-        server.stats.tags.append(req.tag)
-        server.stats.n_requests += 1
-        self._record_runtime(req.tag, req.completed_at - t0)
-        with self._cv:  # reset busyness once done + notify_all()
-            server.busy = False
-            server.last_free_at = time.monotonic()
-            self._cv.notify_all()
-        req.done.set()
-
-    # -- micro-task batching (beyond paper) ---------------------------------
-    def _dispatch_batched(self, req: Request, server: Server):
-        """Coalesce queued batchable same-tag requests into one vmap call."""
-        time.sleep(self.batch_window_s)
-        extra: List[Request] = []
-        with self._cv:
-            keep: deque[Request] = deque()
-            while self._queue and len(extra) < self.max_batch - 1:
-                r = self._queue.popleft()
-                if r.batchable and r.tag == req.tag:
-                    extra.append(r)
-                else:
-                    keep.append(r)
-            while keep:
-                self._queue.appendleft(keep.pop())
-        thetas = [req.theta] + [r.theta for r in extra]
-        now = time.monotonic()
-        for r in extra:
-            r.dispatched_at = now
-            r.server = server.name
-        results = server.batch_fn(thetas)
-        done = time.monotonic()
-        for r, res in zip(extra, list(results)[1:]):
-            r.result = res
-            r.completed_at = done
-            r.done.set()
-        server.stats.n_requests += len(extra)
-        return results[0]
-
-    # -- straggler hedging (beyond paper) -----------------------------------
-    def _record_runtime(self, tag: str, dt: float) -> None:
-        self._runtimes.setdefault(tag, []).append(dt)
-
-    def runtime_quantile(self, tag: str, q: float) -> Optional[float]:
-        xs = sorted(self._runtimes.get(tag, []))
-        if len(xs) < 4:
-            return None
-        idx = min(len(xs) - 1, int(q * len(xs)))
-        return xs[idx]
-
-    def submit_hedged(self, theta, *, tag: str = "") -> Any:
-        """Submit with straggler mitigation: if the primary exceeds the
-        ``hedge_quantile`` of past runtimes for this tag, launch a duplicate;
-        first completion wins."""
-        primary = self.submit_async(theta, tag=tag)
-        q = self.hedge_quantile or 0.95
-        deadline = self.runtime_quantile(tag, q)
-        if deadline is None:
-            return self.result(primary)
-        if primary.done.wait(timeout=deadline * 2.0):
-            return self.result(primary)
-        backup = self.submit_async(theta, tag=tag)
-        backup.hedged = True
-        while True:
-            if primary.done.wait(timeout=0.001):
-                return self.result(primary)
-            if backup.done.wait(timeout=0.001):
-                return self.result(backup)
-
-    # -- telemetry (paper Figs. 8 & 9) --------------------------------------
-    def idle_times(self) -> List[float]:
-        """Queue delays of completed requests — the paper's Fig. 9 metric."""
-        return [
-            r.queue_delay
-            for r in self._history
-            if r.done.is_set() and r.error is None and not r.hedged
-        ]
-
-    def timeline(self) -> List[Dict[str, Any]]:
-        """Per-server busy intervals — the paper's Fig. 8 bar chart data."""
-        rows = []
-        for s in self._servers:
-            for (a, b), tag in zip(s.stats.busy_intervals, s.stats.tags):
-                rows.append({"server": s.name, "start": a, "end": b, "tag": tag})
-        return rows
-
-    def summary(self) -> Dict[str, Any]:
-        idles = self.idle_times()
-        idles_sorted = sorted(idles)
-        n = len(idles_sorted)
-        return {
-            "n_requests": n,
-            "mean_idle_s": sum(idles) / n if n else 0.0,
-            "p50_idle_s": idles_sorted[n // 2] if n else 0.0,
-            "p99_idle_s": idles_sorted[min(n - 1, int(0.99 * n))] if n else 0.0,
-            "max_idle_s": idles_sorted[-1] if n else 0.0,
-            "per_server_uptime": {s.name: s.stats.uptime() for s in self._servers},
-            "failures": sum(s.stats.n_failures for s in self._servers),
-        }
-
-    # -- checkpointing (paper §7 future work) --------------------------------
-    def checkpoint_queue(self) -> List[Dict[str, Any]]:
-        with self._mutex:
-            return [
-                {"theta": r.theta, "tag": r.tag, "batchable": r.batchable}
-                for r in self._queue
-            ]
-
-    def shutdown(self) -> None:
-        with self._cv:
-            self._shutdown = True
-            self._cv.notify_all()
+__all__ = [
+    "CostAwarePolicy",
+    "FifoPolicy",
+    "LeastLoadedPolicy",
+    "LoadBalancer",
+    "POLICIES",
+    "PolicyContext",
+    "PowerOfTwoPolicy",
+    "Request",
+    "RoundRobinPolicy",
+    "SchedulingPolicy",
+    "Server",
+    "ServerDiedError",
+    "ServerStats",
+    "Telemetry",
+    "available_policies",
+    "create_policy",
+    "register_policy",
+]

@@ -24,7 +24,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .balancer import LoadBalancer
+from .balancer import LoadBalancer, Server
 from .mh import ChainStats, Proposal, metropolis_hastings, mh_step
 
 
@@ -58,18 +58,28 @@ class BalancedDensity:
         log_prior: Callable,
         *,
         batchable: bool = False,
+        hedged: bool = False,
     ) -> None:
+        if batchable and hedged:
+            raise ValueError(
+                "batchable and hedged are mutually exclusive: submit_hedged "
+                "dispatches duplicates individually and never coalesces"
+            )
         self.balancer = balancer
         self.tag = tag
         self.log_likelihood = log_likelihood
         self.log_prior = log_prior
         self.batchable = batchable
+        self.hedged = hedged
 
     def __call__(self, theta) -> float:
         lp = float(self.log_prior(np.asarray(theta)))
         if not np.isfinite(lp):
             return float("-inf")
-        obs = self.balancer.submit(theta, tag=self.tag, batchable=self.batchable)
+        if self.hedged:
+            obs = self.balancer.submit_hedged(theta, tag=self.tag)
+        else:
+            obs = self.balancer.submit(theta, tag=self.tag, batchable=self.batchable)
         return lp + float(self.log_likelihood(obs))
 
 
@@ -95,6 +105,7 @@ class MLDASampler:
         *,
         randomize: bool = True,
         adapt: bool = False,
+        balancer: Optional[LoadBalancer] = None,
     ) -> None:
         if len(subchain_lengths) != len(log_posteriors) - 1:
             raise ValueError("need one subchain length per level above 0")
@@ -103,6 +114,9 @@ class MLDASampler:
         self.subchain_lengths = list(subchain_lengths)
         self.randomize = randomize
         self.adapt = adapt
+        # The balancer serving this sampler's densities, when built via
+        # balanced_mlda(); exposes idle-time telemetry next to chain stats.
+        self.balancer = balancer
         self.levels = [LevelRecord() for _ in log_posteriors]
 
     @property
@@ -232,6 +246,72 @@ class MLDASampler:
                 }
             )
         return rows
+
+
+def balanced_mlda(
+    servers_or_balancer: "Sequence[Server] | LoadBalancer",
+    log_likelihood: Callable,
+    log_prior: Callable,
+    proposal: Proposal,
+    subchain_lengths: Sequence[int],
+    *,
+    policy: Optional[str] = None,
+    level_tag: Callable[[int], str] = "level{}".format,
+    batchable_levels: Sequence[int] = (0,),
+    hedged_levels: Sequence[int] = (),
+    randomize: bool = True,
+    **balancer_kwargs,
+) -> Tuple[MLDASampler, LoadBalancer]:
+    """Wire an MLDA hierarchy through the load balancer in one call.
+
+    This is the stack's policy-selection entry point: pass ``policy`` (a
+    registry name — ``fifo`` | ``round_robin`` | ``least_loaded`` |
+    ``power_of_two`` | ``cost_aware`` — default ``fifo``, the
+    paper-faithful Algorithm 1) and every density evaluation of the
+    returned sampler is dispatched under that policy.  Accepts either a
+    server pool (a balancer is built) or an existing :class:`LoadBalancer`
+    (shared across samplers/chains; ``policy``, if given, must then match
+    the balancer's own).
+
+    A level listed in both ``batchable_levels`` and ``hedged_levels`` is
+    hedged, not batched (duplicated submissions are never coalesced).
+
+    Returns ``(sampler, balancer)``; call ``balancer.shutdown()`` when done.
+    """
+    if isinstance(servers_or_balancer, LoadBalancer):
+        balancer = servers_or_balancer
+        if policy is not None and policy != balancer.policy.name:
+            raise ValueError(
+                f"policy is fixed at balancer construction (this balancer "
+                f"runs '{balancer.policy.name}', not '{policy}'); pass "
+                f"servers instead of a LoadBalancer to choose one here"
+            )
+        if balancer_kwargs:
+            raise ValueError(
+                f"balancer options {sorted(balancer_kwargs)} are fixed at "
+                f"balancer construction; pass servers instead of a "
+                f"LoadBalancer to set them here"
+            )
+    else:
+        balancer = LoadBalancer(
+            servers_or_balancer, policy=policy or "fifo", **balancer_kwargs
+        )
+    n_levels = len(subchain_lengths) + 1
+    densities = [
+        BalancedDensity(
+            balancer,
+            level_tag(lvl),
+            log_likelihood,
+            log_prior,
+            batchable=lvl in batchable_levels and lvl not in hedged_levels,
+            hedged=lvl in hedged_levels,
+        )
+        for lvl in range(n_levels)
+    ]
+    sampler = MLDASampler(
+        densities, proposal, subchain_lengths, randomize=randomize, balancer=balancer
+    )
+    return sampler, balancer
 
 
 def delayed_acceptance(

@@ -141,10 +141,11 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, *, seq_parallel: boo
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
     # cost_analysis counts while-loop (lax.scan) bodies once — useless for
     # scan-over-layers models.  hlo_cost multiplies by trip counts.
-    from repro.launch.hlo_cost import analyze
+    from repro.launch.hlo_cost import analyze, xla_cost_analysis
+
+    cost = xla_cost_analysis(compiled)
 
     summary = analyze(compiled.as_text())
     census = {**summary.collectives, "count": summary.collective_count,

@@ -45,6 +45,18 @@ _CALL_ATTR_RE = re.compile(r"(calls|to_apply|body|condition)=\{?%?([\w.\-]+)")
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
 
 
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """Version-portable ``compiled.cost_analysis()``.
+
+    jax 0.4.x returns a one-element list of dicts (one per program), newer
+    jax returns the dict itself; normalise to the dict.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _shape_bytes(type_str: str) -> int:
     total = 0
     for dt, dims in _SHAPE_RE.findall(type_str):

@@ -25,7 +25,23 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+try:  # jax >= 0.6 exports shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x keeps it under experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
+import inspect as _inspect
+
+_SHARD_MAP_PARAMS = frozenset(_inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    """Version-portable ``shard_map``: drops kwargs the installed jax lacks
+    and maps ``check_vma`` (new name) onto ``check_rep`` (old name)."""
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    kwargs = {k: v for k, v in kwargs.items() if k in _SHARD_MAP_PARAMS}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
 
 
 def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:

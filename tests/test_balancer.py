@@ -44,14 +44,16 @@ def test_fifo_start_order_single_server():
 
 def test_idle_time_telemetry_small():
     """Paper Fig. 9: queue delays are tiny relative to service times."""
-    lb = LoadBalancer([Server(make_worker(0.01)) for _ in range(4)])
+    t_service = 0.02  # large enough that scheduler noise can't eat the margin
+    lb = LoadBalancer([Server(make_worker(t_service)) for _ in range(4)])
     reqs = [lb.submit_async(i) for i in range(8)]
     for r in reqs:
         lb.result(r)
     s = lb.summary()
     assert s["n_requests"] == 8
-    # mean idle should be well under one service time
-    assert s["mean_idle_s"] < 0.01
+    # 8 reqs / 4 servers: the second wave waits ~one service time, so the
+    # mean sits near t_service/2 — well under one service time.
+    assert s["mean_idle_s"] < t_service
 
 
 def test_heterogeneous_pools_no_head_of_line_blocking():

@@ -35,7 +35,8 @@ policy = make_policy(mesh)
 with mesh:
     fn, abstract = shard_train_step(cfg, shape, policy, TrainRuntime())
     compiled = fn.lower(*abstract).compile()
-    out["train_flops"] = compiled.cost_analysis().get("flops", 0.0)
+    from repro.launch.hlo_cost import xla_cost_analysis
+    out["train_flops"] = xla_cost_analysis(compiled).get("flops", 0.0)
 
 shape = ShapeConfig("d", seq_len=64, global_batch=8, kind="decode")
 with mesh:

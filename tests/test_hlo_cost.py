@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.launch.hlo_cost import analyze, parse_hlo
+from repro.launch.hlo_cost import analyze, parse_hlo, xla_cost_analysis
 
 
 def _scan_matmul(n, unroll=1):
@@ -30,8 +30,8 @@ def test_scan_flops_scale_with_trip_count(n):
 
 def test_matches_unrolled_ground_truth():
     looped = analyze(jax.jit(_scan_matmul(8)).lower(X, W).compile().as_text())
-    unrolled = (
-        jax.jit(_scan_matmul(8, unroll=8)).lower(X, W).compile().cost_analysis()
+    unrolled = xla_cost_analysis(
+        jax.jit(_scan_matmul(8, unroll=8)).lower(X, W).compile()
     )
     assert looped.flops == pytest.approx(float(unrolled["flops"]), rel=1e-6)
 

@@ -1,0 +1,399 @@
+"""Scheduling-policy subsystem tests (DESIGN.md §3).
+
+Three layers:
+
+1. a deterministic **fake-clock harness** that drives ``SchedulingPolicy``
+   instances through the same select/dispatch contract the real dispatcher
+   uses, with simulated service times — no threads, no real sleeps;
+2. a **recorded-trace equivalence** check: ``policy="fifo"`` must reproduce
+   the exact dispatch order the seed (pre-refactor, thread-per-request)
+   implementation produced on a single-threaded trace, captured verbatim
+   below;
+3. threaded integration checks: head-of-line-blocking avoidance under every
+   registered policy, zero leaked threads after ``shutdown()``, and hedging
+   loser exclusion.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from collections import deque
+
+import pytest
+
+from repro.balancer import (
+    LoadBalancer,
+    PolicyContext,
+    Request,
+    Server,
+    Telemetry,
+    available_policies,
+    create_policy,
+)
+
+
+# --------------------------------------------------------------------------
+# 1. fake-clock harness
+# --------------------------------------------------------------------------
+def simulate(servers, policy, arrivals, service_time):
+    """Run ``arrivals`` [(time, tag), ...] through ``policy`` on ``servers``.
+
+    ``service_time(server, request) -> float`` is the simulated cost model.
+    Returns ``(dispatch_order, requests)`` where dispatch_order is
+    ``[(request_index, server_name), ...]`` in dispatch sequence.
+    """
+    policy = create_policy(policy)
+    policy.reset()
+    telemetry = Telemetry()
+    clock = {"t": 0.0}
+    ctx = PolicyContext(
+        servers=servers, telemetry=telemetry, now=lambda: clock["t"]
+    )
+    for s in servers:  # sim timestamps start at 0, not time.monotonic()
+        s.last_free_at = 0.0
+    queue: deque = deque()
+    running: list = []  # heap of (finish_time, seq, request, server)
+    seq = itertools.count()
+    order, requests = [], []
+    arrivals = sorted(arrivals, key=lambda a: a[0])
+    i = 0
+    while i < len(arrivals) or queue or running:
+        times = []
+        if i < len(arrivals):
+            times.append(arrivals[i][0])
+        if running:
+            times.append(running[0][0])
+        if not times:
+            raise RuntimeError("queued request no server can ever serve")
+        t = clock["t"] = min(times)
+        while running and running[0][0] <= t:
+            _, _, req, server = heapq.heappop(running)
+            req.completed_at = t
+            server.busy = False
+            server.last_free_at = t
+            telemetry.record_completion(req, server)
+        while i < len(arrivals) and arrivals[i][0] <= t:
+            at, tag = arrivals[i]
+            i += 1
+            r = Request(theta=len(requests), tag=tag, arrived_at=at)
+            requests.append(r)
+            queue.append(r)
+        while True:
+            pair = policy.select(queue, ctx)
+            if pair is None:
+                break
+            req, server = pair
+            queue.remove(req)
+            server.busy = True
+            req.dispatched_at = t
+            req.server = server.name
+            order.append((req.theta, server.name))
+            heapq.heappush(
+                running, (t + service_time(server, req), next(seq), req, server)
+            )
+    return order, requests
+
+
+def total_queue_delay(requests) -> float:
+    return sum(r.dispatched_at - r.arrived_at for r in requests)
+
+
+def heterogeneous_speed_pool():
+    """Two fast + two slow generalist servers (speed gap 8x)."""
+    servers = [
+        Server(lambda x: x, name="fast-0"),
+        Server(lambda x: x, name="fast-1"),
+        Server(lambda x: x, name="slow-0"),
+        Server(lambda x: x, name="slow-1"),
+    ]
+    speed = {"fast-0": 1.0, "fast-1": 1.0, "slow-0": 8.0, "slow-1": 8.0}
+    base = {"heavy": 1.0, "light": 0.05}
+
+    def service_time(server, req):
+        return base[req.tag] * speed[server.name]
+
+    return servers, service_time
+
+
+def skewed_two_tag_arrivals(n=48, dt=0.25, heavy_every=4):
+    """A light-dominated stream with periodic heavy solves (paper's regime:
+    task costs spanning orders of magnitude)."""
+    return [
+        (k * dt, "heavy" if k % heavy_every == 0 else "light") for k in range(n)
+    ]
+
+
+# --------------------------------------------------------------------------
+# 2. recorded seed trace (captured from the pre-refactor implementation)
+# --------------------------------------------------------------------------
+# Protocol used for the capture (single client thread):
+#   * pool: any-0 (accepts all), pde-0 (tag 'pde'), gp-0 (tag 'gp');
+#   * requests submitted one at a time in SEED_TAGS order, each visibly
+#     enqueued/dispatched before the next (arrival order == submission
+#     order); server fns block on per-request release events;
+#   * completions released in SEED_RELEASE_ORDER, settling between releases.
+SEED_TAGS = ["", "pde", "gp", "pde", "", "gp", "pde", "", "gp", "pde", "", ""]
+SEED_RELEASE_ORDER = [0, 2, 1, 3, 5, 4, 6, 8, 7, 9, 10, 11]
+SEED_EXPECTED_DISPATCH = [
+    (0, "any-0"), (1, "pde-0"), (2, "gp-0"), (3, "any-0"), (5, "gp-0"),
+    (6, "pde-0"), (4, "any-0"), (8, "gp-0"), (7, "any-0"), (9, "pde-0"),
+    (10, "any-0"), (11, "any-0"),
+]
+
+
+def test_fifo_reproduces_seed_dispatch_order():
+    dispatch_log = []
+    log_lock = threading.Lock()
+    releases = {i: threading.Event() for i in range(len(SEED_TAGS))}
+
+    def make_fn(name):
+        def fn(x):
+            with log_lock:
+                dispatch_log.append((x, name))
+            releases[x].wait(10)
+            return x
+
+        return fn
+
+    lb = LoadBalancer(
+        [
+            Server(make_fn("any-0"), name="any-0"),
+            Server(make_fn("pde-0"), name="pde-0", capacity_tags=("pde",)),
+            Server(make_fn("gp-0"), name="gp-0", capacity_tags=("gp",)),
+        ],
+        policy="fifo",
+    )
+    reqs = []
+    for i, tag in enumerate(SEED_TAGS):
+        r = lb.submit_async(i, tag=tag)
+        reqs.append(r)
+        deadline = time.monotonic() + 2
+        while time.monotonic() < deadline:  # wait until enqueued or dispatched
+            with lb._mutex:
+                if r in lb._queue or r.dispatched_at:
+                    break
+            time.sleep(0.001)
+        time.sleep(0.01)  # let any dispatch settle
+    for i in SEED_RELEASE_ORDER:
+        releases[i].set()
+        assert reqs[i].done.wait(10)
+        time.sleep(0.02)
+    for r in reqs:
+        lb.result(r, timeout=10)
+    lb.shutdown()
+    assert dispatch_log == SEED_EXPECTED_DISPATCH
+
+
+# --------------------------------------------------------------------------
+# policy behaviour on the fake clock
+# --------------------------------------------------------------------------
+def test_load_aware_policies_beat_round_robin_on_skewed_workload():
+    """least_loaded and power_of_two must beat round_robin by total queue
+    delay on a skewed two-tag workload over a speed-heterogeneous pool.
+
+    Giving every server equal turns parks heavy solves on 8x-slower
+    servers, burning capacity the backlog then pays for; load-aware
+    policies route work toward the servers with the least accumulated
+    busy time — i.e. the fast ones.
+    """
+    arrivals = skewed_two_tag_arrivals(n=64, dt=0.3, heavy_every=2)
+    delays = {}
+    for policy in ("round_robin", "least_loaded", "power_of_two"):
+        servers, service_time = heterogeneous_speed_pool()
+        _, requests = simulate(servers, policy, arrivals, service_time)
+        assert all(r.dispatched_at >= r.arrived_at for r in requests)
+        delays[policy] = total_queue_delay(requests)
+    assert delays["round_robin"] > 0.5, "scenario failed to produce queueing"
+    # robust margins (>20%) on this deterministic scenario, not ties
+    assert delays["least_loaded"] < 0.8 * delays["round_robin"]
+    assert delays["power_of_two"] < 0.8 * delays["round_robin"]
+
+
+def test_cost_aware_routes_long_tags_to_fast_servers():
+    """Once the EWMA cost model has data, cost_aware must not schedule a
+    heavy solve on a slow server while a fast one is free."""
+    arrivals = skewed_two_tag_arrivals()
+    servers, service_time = heterogeneous_speed_pool()
+    order, requests = simulate(servers, "cost_aware", arrivals, service_time)
+    warm = {r.theta for r in requests[:8]}  # EWMA warm-up phase
+    late_heavy = [
+        (idx, srv)
+        for idx, srv in order
+        if requests[idx].tag == "heavy" and idx not in warm
+    ]
+    assert late_heavy, "scenario produced no post-warm-up heavy dispatches"
+    frac_fast = sum(srv.startswith("fast") for _, srv in late_heavy) / len(late_heavy)
+    assert frac_fast >= 0.8
+
+
+def test_every_policy_is_deterministic_on_fake_clock():
+    arrivals = skewed_two_tag_arrivals()
+    for policy in available_policies():
+        runs = []
+        for _ in range(2):
+            servers, service_time = heterogeneous_speed_pool()
+            order, _ = simulate(servers, policy, arrivals, service_time)
+            runs.append(order)
+        assert runs[0] == runs[1], f"policy '{policy}' is nondeterministic"
+
+
+def test_fifo_on_fake_clock_is_fifo_per_tag():
+    servers, service_time = heterogeneous_speed_pool()
+    order, requests = simulate(
+        servers, "fifo", skewed_two_tag_arrivals(), service_time
+    )
+    for tag in ("heavy", "light"):
+        dispatched = [i for i, _ in order if requests[i].tag == tag]
+        assert dispatched == sorted(dispatched)
+
+
+# --------------------------------------------------------------------------
+# 3. threaded integration
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", sorted(available_policies()))
+def test_no_head_of_line_blocking_under_every_policy(policy):
+    """A queued fine-PDE request must not block a free GP server — the
+    seed's heterogeneous-tag guarantee, now an invariant of every policy."""
+    t_slow = 0.05
+
+    def worker(duration):
+        def fn(x):
+            if duration:
+                time.sleep(duration)
+            return x * 2
+
+        return fn
+
+    lb = LoadBalancer(
+        [
+            Server(worker(t_slow), name="pde", capacity_tags=("pde",)),
+            Server(worker(0.0), name="gp", capacity_tags=("gp",)),
+        ],
+        policy=policy,
+    )
+    r1 = lb.submit_async(1, tag="pde")
+    time.sleep(0.005)
+    r2 = lb.submit_async(2, tag="pde")
+    t0 = time.monotonic()
+    r3 = lb.submit_async(3, tag="gp")
+    assert lb.result(r3) == 6
+    gp_latency = time.monotonic() - t0
+    assert gp_latency < t_slow / 2, "gp request stuck behind pde queue"
+    assert (lb.result(r1), lb.result(r2)) == (2, 4)
+    lb.shutdown()
+
+
+@pytest.mark.parametrize("policy", sorted(available_policies()))
+def test_shutdown_leaks_no_threads(policy):
+    baseline = threading.active_count()
+    lb = LoadBalancer(
+        [Server(lambda x: x, name=f"s{i}") for i in range(4)], policy=policy
+    )
+    reqs = [lb.submit_async(i) for i in range(32)]
+    assert [lb.result(r) for r in reqs] == list(range(32))
+    assert threading.active_count() > baseline  # engine actually ran threads
+    lb.shutdown()
+    assert threading.active_count() == baseline
+
+
+def test_shutdown_fails_queued_requests():
+    release = threading.Event()
+    lb = LoadBalancer([Server(lambda x: release.wait(5) or x)])
+    r1 = lb.submit_async(1)  # occupies the only server
+    time.sleep(0.01)
+    r2 = lb.submit_async(2)  # queued behind it
+
+    t = threading.Thread(target=lb.shutdown)
+    t.start()
+    # shutdown fails the queued request while the in-flight one still runs
+    assert r2.done.wait(2)
+    with pytest.raises(RuntimeError, match="shut down"):
+        lb.result(r2)
+    release.set()  # let the in-flight request finish; shutdown can join
+    t.join(5)
+    assert not t.is_alive()
+    assert lb.result(r1, timeout=1) == 1
+
+
+def test_unservable_tag_rejected_at_submit():
+    lb = LoadBalancer([Server(lambda x: x, capacity_tags=("gp",))])
+    req = lb.submit_async(1, tag="pde")
+    with pytest.raises(RuntimeError, match="no live server accepts"):
+        lb.result(req, timeout=1)
+    assert lb.submit(2, tag="gp") == 2  # servable traffic unaffected
+    lb.shutdown()
+
+
+def test_balanced_mlda_policy_threading():
+    from repro.core import GaussianRandomWalk
+    from repro.core.mlda import balanced_mlda
+
+    servers = [Server(lambda t: t, name="s0")]
+    sampler, lb = balanced_mlda(
+        servers, lambda obs: 0.0, lambda t: 0.0, GaussianRandomWalk(0.1), [2],
+        policy="least_loaded", level_tag=lambda lvl: "",
+    )
+    assert lb.policy.name == "least_loaded"
+    assert sampler.balancer is lb
+    # sharing an existing balancer: consistent policy ok, mismatch rejected
+    sampler2, lb2 = balanced_mlda(
+        lb, lambda obs: 0.0, lambda t: 0.0, GaussianRandomWalk(0.1), [2],
+        policy="least_loaded",
+    )
+    assert lb2 is lb
+    with pytest.raises(ValueError, match="runs 'least_loaded'"):
+        balanced_mlda(
+            lb, lambda obs: 0.0, lambda t: 0.0, GaussianRandomWalk(0.1), [2],
+            policy="fifo",
+        )
+    with pytest.raises(ValueError, match="fixed at balancer construction"):
+        balanced_mlda(
+            lb, lambda obs: 0.0, lambda t: 0.0, GaussianRandomWalk(0.1), [2],
+            max_retries=5,
+        )
+    lb.shutdown()
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        LoadBalancer([Server(lambda x: x)], policy="nope")
+
+
+def test_registry_has_the_five_families():
+    assert set(available_policies()) >= {
+        "fifo", "round_robin", "least_loaded", "power_of_two", "cost_aware"
+    }
+
+
+def test_hedged_loser_excluded_even_when_backup_wins():
+    """submit_hedged: first completion wins via a shared Event (no
+    busy-poll) and the losing duplicate never enters idle-time stats."""
+    slow_once = threading.Event()
+
+    def fn(x):
+        if x == "H" and not slow_once.is_set():
+            slow_once.set()
+            time.sleep(0.25)  # straggling primary
+        else:
+            time.sleep(0.001)
+        return x
+
+    lb = LoadBalancer(
+        [Server(fn, name="a"), Server(fn, name="b")], hedge_quantile=0.9
+    )
+    for i in range(8):  # build runtime history
+        lb.submit(i, tag="t")
+    t0 = time.monotonic()
+    assert lb.submit_hedged("H", tag="t") == "H"
+    assert time.monotonic() - t0 < 0.2, "hedge did not rescue the straggler"
+    # wait out the straggling primary, then check the books
+    time.sleep(0.3)
+    hedge_reqs = [r for r in lb.telemetry._history if r.theta == "H"]
+    assert len(hedge_reqs) == 2
+    assert sum(r.hedged for r in hedge_reqs) == 1, "exactly one loser flagged"
+    winner = next(r for r in hedge_reqs if not r.hedged)
+    assert winner.server is not None
+    assert lb.summary()["n_requests"] == 9  # 8 history + 1 hedge winner
+    lb.shutdown()

@@ -2,6 +2,9 @@
 import threading
 import time
 
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
