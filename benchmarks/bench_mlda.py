@@ -1,37 +1,74 @@
-"""Paper Table 1 reproduction: 3-level MLDA hierarchy statistics.
+"""Paper Table 1 reproduction + ensemble pool-utilization benchmark.
 
-Runs the CPU-scaled Tōhoku inversion (GP / coarse SWE / fine SWE), reports
-per-level eval counts, mean eval seconds, acceptance rates, E[phi] and
-V[phi] per coordinate — the exact columns of the paper's Table 1 — plus the
-variance-reduction check across levels.
+Part A (Table 1): runs the CPU-scaled Tōhoku inversion (GP / coarse SWE /
+fine SWE) single-chain and reports per-level eval counts, mean eval
+seconds, acceptance rates, E[phi] and V[phi] per coordinate — the exact
+columns of the paper's Table 1 — plus the variance-reduction check.
+
+Part B (utilization): the same hierarchy behind a load balancer, driven by
+the ensemble runner with 1 chain and then ``n_chains >= 4``.  A single
+blocking chain can keep at most one of the pool's servers busy at a time;
+multiplexed chains overlap one chain's coarse subchains with another's
+fine solves, so pool utilization (busy-seconds / (wall x n_servers)) must
+rise with chain count — the scheduling win of Seelinger et al.
+(arXiv:2107.14552) that motivates the async pipeline.
+
+Writes ``benchmarks/BENCH_mlda.json`` so the perf trajectory is tracked;
+``--smoke`` runs a scaled-down workload (CI) and exits non-zero if the
+ensemble does not reach 2x the single-chain utilization.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 from typing import List
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.tohoku_mlda import CPU as WORKLOAD
-from repro.core import GaussianRandomWalk, MLDASampler
-from repro.swe import TohokuScenario, make_hierarchy, train_level0_gp
+from repro.configs.tohoku_mlda import CPU, MLDAWorkloadConfig
+from repro.core import GaussianRandomWalk, MLDASampler, balanced_mlda
+from repro.swe import (
+    TohokuScenario,
+    make_hierarchy,
+    make_level_servers,
+    train_level0_gp,
+)
+
+# The CPU workload's grids (so the forward-solve cost spread is the real
+# one: fine ~70 ms >> coarse ~10 ms >> GP ~1 ms) with the GP training and
+# sample budgets shrunk to CI-sized wall time.
+SMOKE = MLDAWorkloadConfig(
+    name="smoke",
+    coarse_grid=CPU.coarse_grid,
+    fine_grid=CPU.fine_grid,
+    t_end_s=CPU.t_end_s,
+    gp_train_points=16,
+    gp_opt_steps=20,
+    n_chains=6,
+    n_fine_samples=8,
+    subchain_lengths=(3, 2),
+    rw_step_km=6.0,  # higher acceptance -> subchains move -> fine solves flow
+    speculative_prefetch=True,
+)
 
 
-def run(n_fine: int = 20):
-    fine = TohokuScenario(
-        nx=WORKLOAD.fine_grid[0], ny=WORKLOAD.fine_grid[1], t_end=WORKLOAD.t_end_s
-    )
+def build(w: MLDAWorkloadConfig):
+    fine = TohokuScenario(nx=w.fine_grid[0], ny=w.fine_grid[1], t_end=w.t_end_s)
     coarse = TohokuScenario(
-        nx=WORKLOAD.coarse_grid[0], ny=WORKLOAD.coarse_grid[1], t_end=WORKLOAD.t_end_s
+        nx=w.coarse_grid[0], ny=w.coarse_grid[1], t_end=w.t_end_s
     )
     h = make_hierarchy(fine=fine, coarse=coarse)
     prob, f_fine, f_coarse = h["problem"], h["forward_fine"], h["forward_coarse"]
     gp = train_level0_gp(
-        f_coarse, prob, n_train=WORKLOAD.gp_train_points, steps=WORKLOAD.gp_opt_steps
+        f_coarse, prob, n_train=w.gp_train_points, steps=w.gp_opt_steps
     )
+    return prob, gp, f_coarse, f_fine
 
+
+def run_table1(w: MLDAWorkloadConfig, prob, gp, f_coarse, f_fine, n_fine: int):
     def density(forward):
         def lp(t):
             pr = prob.log_prior(t)
@@ -43,44 +80,155 @@ def run(n_fine: int = 20):
 
     sampler = MLDASampler(
         [density(gp), density(f_coarse), density(f_fine)],
-        GaussianRandomWalk(WORKLOAD.rw_step_km),
-        list(WORKLOAD.subchain_lengths),
+        GaussianRandomWalk(w.rw_step_km),
+        list(w.subchain_lengths),
     )
     chain = sampler.sample(np.array([60.0, 60.0]), n_fine, np.random.default_rng(0))
     return sampler, chain
 
 
-def main() -> List[str]:
-    sampler, chain = run()
+def run_utilization(
+    w: MLDAWorkloadConfig, prob, gp, f_coarse, f_fine, n_chains: int, n_fine: int
+):
+    """Pool utilization of an n-chain ensemble on a fresh balancer.
+
+    The 1-chain run keeps speculation off — it is the paper-faithful
+    blocking client this PR's async pipeline is measured against; the
+    multi-chain run uses the full pipeline (ensemble multiplexing +
+    configured speculative prefetch).
+    """
+    servers = make_level_servers(w, gp, f_coarse, f_fine)
+    runner, lb = balanced_mlda(
+        servers,
+        prob.log_likelihood,
+        prob.log_prior,
+        GaussianRandomWalk(w.rw_step_km),
+        list(w.subchain_lengths),
+        policy=w.balancer_policy,
+        n_chains=n_chains,
+        ensemble_seed=w.ensemble_seed,
+        speculative=w.speculative_prefetch and n_chains > 1,
+        as_runner=True,
+    )
+    t0 = time.monotonic()
+    result = runner.run(
+        lambda c, rng: prob.sample_prior(rng)[0] * 0.5, n_fine
+    )
+    wall = time.monotonic() - t0
+    summary = lb.summary()
+    busy = sum(summary["per_server_uptime"].values())
+    lb.shutdown()
+    util = busy / (wall * len(servers)) if wall > 0 else 0.0
+    spec = result.summary()
+    return {
+        "n_chains": n_chains,
+        "n_servers": len(servers),
+        "wall_s": wall,
+        "busy_s": busy,
+        "utilization": util,
+        "n_requests": summary["n_requests"],
+        "mean_idle_s": summary["mean_idle_s"],
+        "gelman_rubin": spec["gelman_rubin"],
+        "n_speculated": spec["n_speculated"],
+        "n_spec_hits": spec["n_spec_hits"],
+        "spec_discarded": [lvl["n_spec_discarded"] for lvl in spec["levels"]],
+    }
+
+
+def main(smoke: bool = False, n_fine: int = 0, ensemble_chains: int = 0):
+    w = SMOKE if smoke else CPU
+    n_fine = n_fine or w.n_fine_samples
+    ensemble_chains = ensemble_chains or max(4, w.n_chains)
+
+    prob, gp, f_coarse, f_fine = build(w)
+    # Warm the jit caches so compile time doesn't pollute utilization.
+    _ = np.asarray(f_fine(jnp.asarray([60.0, 60.0])))
+    _ = np.asarray(f_coarse(jnp.asarray([60.0, 60.0])))
+    _ = np.asarray(gp(jnp.asarray([60.0, 60.0])))
+
+    sampler, chain = run_table1(w, prob, gp, f_coarse, f_fine, n_fine)
     rows = []
+    table1 = []
     for r in sampler.stats_table():
         e = r["E_phi"] or [float("nan")] * 2
         v = r["V_phi"] or [float("nan")] * 2
-        rows.append(
-            f"mlda_level{r['level']}_evals,{r['n_evals']},count"
-        )
+        table1.append(r)
+        rows.append(f"mlda_level{r['level']}_evals,{r['n_evals']},count")
         rows.append(
             f"mlda_level{r['level']}_mean_eval,{r['mean_eval_s'] * 1e6:.0f},us"
         )
         rows.append(
             f"mlda_level{r['level']}_acceptance,{r['acceptance_rate']:.3f},rate"
         )
-        rows.append(
-            f"mlda_level{r['level']}_E,({e[0]:.1f};{e[1]:.1f}),km"
-        )
-        rows.append(
-            f"mlda_level{r['level']}_V,({v[0]:.0f};{v[1]:.0f}),km2"
-        )
+        rows.append(f"mlda_level{r['level']}_E,({e[0]:.1f};{e[1]:.1f}),km")
+        rows.append(f"mlda_level{r['level']}_V,({v[0]:.0f};{v[1]:.0f}),km2")
     # variance reduction across levels (paper §6.1)
     from repro.core.diagnostics import variance_reduction_check
 
     samples = [np.asarray(r.samples) for r in sampler.levels if r.samples]
     vr = variance_reduction_check(samples)
     rows.append(f"mlda_variance_reduction,{all(vr)},bool")
-    rows.append(f"mlda_fine_posterior_mean,({chain.mean(0)[0]:.1f};{chain.mean(0)[1]:.1f}),km")
+    rows.append(
+        f"mlda_fine_posterior_mean,({chain.mean(0)[0]:.1f};{chain.mean(0)[1]:.1f}),km"
+    )
+
+    single = run_utilization(w, prob, gp, f_coarse, f_fine, 1, n_fine)
+    multi = run_utilization(
+        w, prob, gp, f_coarse, f_fine, ensemble_chains, n_fine
+    )
+    ratio = multi["utilization"] / max(single["utilization"], 1e-12)
+    rows.append(f"mlda_pool_util_1chain,{single['utilization']:.3f},frac")
+    rows.append(
+        f"mlda_pool_util_{ensemble_chains}chain,{multi['utilization']:.3f},frac"
+    )
+    rows.append(f"mlda_pool_util_ratio,{ratio:.2f},x")
+    rows.append(f"mlda_spec_hits,{multi['n_spec_hits']},count")
+    rows.append(f"mlda_spec_attempts,{multi['n_speculated']},count")
+
+    payload = {
+        "workload": w.name,
+        "n_fine_samples": n_fine,
+        "table1": table1,
+        "utilization": {
+            "single_chain": single,
+            "ensemble": multi,
+            "ratio": ratio,
+        },
+    }
+    out_path = os.path.join(os.path.dirname(__file__), "BENCH_mlda.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    rows.append(f"mlda_bench_json,{out_path},path")
     return rows
 
 
+def _util_ratio(rows: List[str]) -> float:
+    for row in rows:
+        if row.startswith("mlda_pool_util_ratio,"):
+            return float(row.split(",")[1])
+    return 0.0
+
+
 if __name__ == "__main__":
-    for row in main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled-down CI workload; fails if ensemble "
+                         "utilization ratio < --min-ratio")
+    ap.add_argument("--min-ratio", type=float, default=2.0,
+                    help="utilization-ratio gate for --smoke (2.0 on idle "
+                         "hardware; CI uses a lower bar since contended "
+                         "shared runners compress solve overlap)")
+    ap.add_argument("--n-fine", type=int, default=0)
+    ap.add_argument("--chains", type=int, default=0)
+    args = ap.parse_args()
+    out_rows = main(
+        smoke=args.smoke, n_fine=args.n_fine, ensemble_chains=args.chains
+    )
+    for row in out_rows:
         print(row)
+    util_ratio = _util_ratio(out_rows)
+    if args.smoke and util_ratio < args.min_ratio:
+        raise SystemExit(
+            f"ensemble pool utilization only {util_ratio:.2f}x the "
+            f"single-chain figure (expected >= {args.min_ratio}x)"
+        )

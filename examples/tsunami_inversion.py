@@ -2,14 +2,16 @@
 
 Pipeline: synthetic Tōhoku scenario -> observations from the fine model at
 (0, 0) -> GP surrogate trained on LHS draws of the coarse model (level 0)
--> 3-level MLDA through the load balancer, multiple parallel chains ->
-posterior vs the known source + per-level Table-1 stats + Fig. 9 idle times
-+ the Fig. 6 time-series GP.
+-> 3-level MLDA through the load balancer, multiple chains multiplexed by
+the ensemble driver (``repro.ensemble.EnsembleRunner``: one thread keeps
+every chain's step machine fed, so coarse subchains of one chain overlap
+the fine solves of another on the shared server pool) -> posterior vs the
+known source + per-level Table-1 stats + split-R-hat/ESS cross-chain
+diagnostics + Fig. 9 idle times + the Fig. 6 time-series GP.
 
 Run:  PYTHONPATH=src python examples/tsunami_inversion.py  (~5-10 min CPU)
 """
 import argparse
-import threading
 import time
 
 import jax
@@ -19,14 +21,16 @@ import numpy as np
 from repro.configs.tohoku_mlda import CONFIGS
 from repro.core import (
     GaussianRandomWalk,
-    LoadBalancer,
-    MLDASampler,
-    Server,
     available_policies,
+    balanced_mlda,
 )
 from repro.core.diagnostics import telescoping_estimate, variance_reduction_check
-from repro.core.mlda import BalancedDensity
-from repro.swe import TohokuScenario, make_hierarchy, train_level0_gp
+from repro.swe import (
+    TohokuScenario,
+    make_hierarchy,
+    make_level_servers,
+    train_level0_gp,
+)
 
 
 def main():
@@ -57,64 +61,48 @@ def main():
     gp = train_level0_gp(f_coarse, prob, n_train=w.gp_train_points, steps=w.gp_opt_steps)
     print(f"      {time.time() - t0:.1f}s")
 
-    print(f"[3/4] MLDA x {n_chains} chains via the load balancer "
-          f"(policy={policy})")
-    servers = [
-        Server(lambda t: gp(jnp.asarray(t)), name="gp-0", capacity_tags=("level0",)),
-    ]
-    for i in range(max(w.servers_per_level.get(1, 1), 1)):
-        servers.append(
-            Server(lambda t: f_coarse(jnp.asarray(t)), name=f"coarse-{i}",
-                   capacity_tags=("level1",))
-        )
-    for i in range(max(w.servers_per_level.get(2, 1), 1)):
-        servers.append(
-            Server(lambda t: f_fine(jnp.asarray(t)), name=f"fine-{i}",
-                   capacity_tags=("level2",))
-        )
-    lb = LoadBalancer(servers, policy=policy)
+    print(f"[3/4] MLDA x {n_chains} chains via the ensemble driver "
+          f"(policy={policy}, speculative={w.speculative_prefetch})")
+    servers = make_level_servers(w, gp, f_coarse, f_fine)
 
-    def make_sampler():
-        dens = [
-            BalancedDensity(lb, f"level{l}", prob.log_likelihood, prob.log_prior,
-                            batchable=(l == 0))
-            for l in range(3)
-        ]
-        return MLDASampler(dens, GaussianRandomWalk(w.rw_step_km),
-                           list(w.subchain_lengths))
-
+    runner, lb = balanced_mlda(
+        servers,
+        prob.log_likelihood,
+        prob.log_prior,
+        GaussianRandomWalk(w.rw_step_km),
+        list(w.subchain_lengths),
+        policy=policy,
+        n_chains=n_chains,
+        ensemble_seed=w.ensemble_seed,
+        speculative=w.speculative_prefetch,
+        as_runner=True,
+    )
     t0 = time.time()
-    samplers = [make_sampler() for _ in range(n_chains)]
-    chains = [None] * n_chains
-
-    def run_chain(c):
-        rng = np.random.default_rng(c)
-        theta0 = prob.sample_prior(rng)[0] * 0.5
-        chains[c] = samplers[c].sample(theta0, w.n_fine_samples, rng)
-
-    threads = [threading.Thread(target=run_chain, args=(c,)) for c in range(n_chains)]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join()
+    result = runner.run(
+        lambda c, rng: prob.sample_prior(rng)[0] * 0.5, w.n_fine_samples
+    )
     wall = time.time() - t0
+    samplers = result.samplers
 
     print(f"[4/4] results ({wall:.0f}s sampling wall time)")
-    allc = np.concatenate([c[max(2, len(c) // 5):] for c in chains])
+    burn = max(2, w.n_fine_samples // 5)
+    allc = result.pooled(burn)
     print(f"      fine posterior mean = {allc.mean(0).round(1)} km "
           f"(reference (0, 0); paper Fig. 7)")
     print(f"      fine posterior std  = {allc.std(0).round(1)} km")
+    print(f"      split-R-hat = {result.gelman_rubin().round(3)}  "
+          f"ESS(total) = {np.round(result.ess().sum(0), 1)}")
 
-    # Table 1 analogue
-    print("      level | evals | acc   | mean eval")
-    for lvl in range(3):
-        ev = sum(s.levels[lvl].n_evals for s in samplers)
-        ac = np.mean([s.levels[lvl].acceptance_rate for s in samplers])
-        ms = np.mean([
-            s.levels[lvl].eval_seconds / max(s.levels[lvl].n_evals, 1)
-            for s in samplers
-        ])
-        print(f"        {lvl}   | {ev:5d} | {ac:.3f} | {ms * 1e3:8.1f} ms")
+    # Table 1 analogue (+ speculation telemetry)
+    print("      level | evals | acc   | mean eval | spec-discard")
+    for row in result.level_totals():
+        print(f"        {row['level']}   | {row['n_evals']:5d} "
+              f"| {row['acceptance_rate']:.3f} "
+              f"| {row['mean_eval_s'] * 1e3:8.1f} ms "
+              f"| {row['n_spec_discarded']:5d}")
+    spec_total = result.summary()
+    print(f"      speculative prefetch: {spec_total['n_spec_hits']}"
+          f"/{spec_total['n_speculated']} guesses held")
 
     sample_sets = [
         np.concatenate([np.asarray(s.levels[lvl].samples) for s in samplers])

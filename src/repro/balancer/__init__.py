@@ -8,13 +8,18 @@ Layout (DESIGN.md §2-3):
   default; ``round_robin`` / ``least_loaded`` / ``power_of_two`` /
   ``cost_aware`` explore the scheme families of psim and Gmeiner et al.);
 * :mod:`repro.balancer.dispatcher` — the event-driven core: one dispatch
-  loop + a fixed worker pool (no thread-per-request);
+  loop + an elastic worker pool (no thread-per-request; shrinks when
+  servers retire or die);
+* :mod:`repro.balancer.futures`    — client-side multi-request primitives
+  (``wait_any`` / ``as_completed`` / ``gather``) so one thread can keep
+  many requests outstanding (the ensemble driver's contract);
 * :mod:`repro.balancer.telemetry`  — idle-time/timeline bookkeeping and
   the runtime EWMA cost model, behind its own lock.
 
 ``repro.core.balancer`` re-exports this package for backward compatibility.
 """
 from .dispatcher import LoadBalancer
+from .futures import as_completed, gather, wait_any
 from .policies import (
     CostAwarePolicy,
     FifoPolicy,
@@ -46,7 +51,10 @@ __all__ = [
     "ServerDiedError",
     "ServerStats",
     "Telemetry",
+    "as_completed",
     "available_policies",
     "create_policy",
+    "gather",
     "register_policy",
+    "wait_any",
 ]

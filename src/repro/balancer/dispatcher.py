@@ -77,7 +77,8 @@ class LoadBalancer:
         self._started = False
         self._unservable_dirty = False  # set when a server dies / retires
         self._dispatcher: Optional[threading.Thread] = None
-        self._workers: List[threading.Thread] = []
+        self._workers: List[threading.Thread] = []  # every worker ever started
+        self._n_live_workers = 0  # workers not yet retired; guarded by _work_cv
         self._work: deque[Tuple[Request, Server]] = deque()
         self._work_cv = threading.Condition()
 
@@ -112,6 +113,10 @@ class LoadBalancer:
                     s.dead = True
             self._unservable_dirty = True
             self._cv.notify_all()
+        # The worker pool sizes itself to the live-server count; wake idle
+        # workers so the now-excess ones park out (see _worker_loop).
+        with self._work_cv:
+            self._work_cv.notify_all()
 
     # -- engine lifecycle ----------------------------------------------------
     def _n_workers_wanted(self) -> int:
@@ -130,14 +135,19 @@ class LoadBalancer:
         self._grow_workers_locked()
 
     def _grow_workers_locked(self) -> None:
-        while len(self._workers) < self._n_workers_wanted():
-            t = threading.Thread(
-                target=self._worker_loop,
-                name=f"lb-worker-{len(self._workers)}",
-                daemon=True,
-            )
-            self._workers.append(t)
-            t.start()
+        # _n_live_workers (not len(_workers)) is the pool size: workers that
+        # parked out after a shrink stay in _workers so shutdown can join
+        # them, but no longer count toward capacity.
+        with self._work_cv:
+            while self._n_live_workers < self._n_workers_wanted():
+                t = threading.Thread(
+                    target=self._worker_loop,
+                    name=f"lb-worker-{len(self._workers)}",
+                    daemon=True,
+                )
+                self._workers.append(t)
+                self._n_live_workers += 1
+                t.start()
 
     def shutdown(self) -> None:
         """Stop accepting work, fail queued requests, join every thread.
@@ -197,6 +207,44 @@ class LoadBalancer:
                 return req
         req._complete()
         return req
+
+    def submit_many(
+        self, thetas: Sequence[Any], *, tag: str = "", batchable: bool = False
+    ) -> List[Request]:
+        """Enqueue a batch of requests under one lock acquisition.
+
+        Returns the requests in submission order; combine with
+        :func:`repro.balancer.futures.wait_any` /
+        :func:`~repro.balancer.futures.as_completed` to react to whichever
+        finishes first, or :func:`~repro.balancer.futures.gather` for the
+        barrier round trip.  All-or-nothing admission: if the pool cannot
+        serve ``tag`` (or is shut down) every request completes immediately
+        with the error set.
+        """
+        reqs = [
+            Request(
+                theta=theta, tag=tag, batchable=batchable,
+                arrived_at=time.monotonic(),
+            )
+            for theta in thetas
+        ]
+        for req in reqs:
+            self._telemetry.record_arrival(req)
+        error: Optional[str] = None
+        with self._cv:
+            if self._shutdown:
+                error = "balancer shut down"
+            elif not any(not s.dead and s.accepts(tag) for s in self._servers):
+                error = f"no live server accepts tag '{tag}'"
+            else:
+                self._ensure_started_locked()
+                self._queue.extend(reqs)
+                self._cv.notify_all()
+        if error is not None:
+            for req in reqs:
+                req.error = RuntimeError(error)
+                req._complete()
+        return reqs
 
     def result(self, req: Request, timeout: Optional[float] = None) -> Any:
         if not req.done.wait(timeout):
@@ -261,6 +309,12 @@ class LoadBalancer:
                 while not self._work:
                     if self._shutdown:
                         return
+                    if self._n_live_workers > self._n_workers_wanted():
+                        # Pool shrank (server retired/died): park this
+                        # worker out rather than idling forever.  Checked
+                        # only when idle, so queued work is never abandoned.
+                        self._n_live_workers -= 1
+                        return
                     self._work_cv.wait()
                 req, server = self._work.popleft()
             self._execute(req, server)
@@ -280,6 +334,8 @@ class LoadBalancer:
                 server.busy = False
                 self._unservable_dirty = True
                 self._cv.notify_all()
+            with self._work_cv:  # a death shrinks the pool like a retire
+                self._work_cv.notify_all()
             req.retries += 1
             if req.retries > self.max_retries:
                 req.error = ServerDiedError(
@@ -319,8 +375,18 @@ class LoadBalancer:
 
         Coalesced requests are completed directly by this worker — unlike
         the seed there is no per-request waiter thread left behind.
+
+        The coalescing window is only paid when there is actually something
+        to coalesce: a lone batchable request (no queued same-tag batchable
+        peer at dispatch time) executes immediately instead of sleeping
+        ``batch_window_s`` for peers that are not coming.
         """
-        time.sleep(self.batch_window_s)
+        with self._mutex:
+            has_peer = any(
+                r.batchable and r.tag == req.tag for r in self._queue
+            )
+        if has_peer:
+            time.sleep(self.batch_window_s)
         extra: List[Request] = []
         with self._cv:
             keep: deque[Request] = deque()

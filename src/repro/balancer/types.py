@@ -106,6 +106,18 @@ class Request:        # numpy thetas ("truth value ambiguous" in queue.remove)
                 return
         fn(self)
 
+    def remove_done_callback(self, fn: Callable[["Request"], None]) -> None:
+        """Deregister a pending callback (no-op if absent or already fired).
+
+        Lets repeated waiters (:func:`repro.balancer.futures.wait_any`)
+        clean up after themselves instead of accumulating stale closures on
+        long-running requests."""
+        with self._cb_lock:
+            try:
+                self._callbacks.remove(fn)
+            except ValueError:
+                pass
+
     def _complete(self) -> None:
         """Set ``done`` and fire callbacks exactly once each."""
         with self._cb_lock:

@@ -34,6 +34,13 @@ class MLDAWorkloadConfig:
     # paper-faithful Algorithm 1 default; alternatives: 'round_robin',
     # 'least_loaded', 'power_of_two', 'cost_aware'.
     balancer_policy: str = "fifo"
+    # ensemble (repro.ensemble): chains are multiplexed through one shared
+    # balancer by a single driver thread; per-chain RNG streams are spawned
+    # from ensemble_seed.  speculative_prefetch starts the next coarse
+    # subchain while a fine solve is still on a server (bit-identical
+    # chains either way; see DESIGN.md §8).
+    ensemble_seed: int = 0
+    speculative_prefetch: bool = False
 
 
 PAPER = MLDAWorkloadConfig(
@@ -55,6 +62,7 @@ CPU = MLDAWorkloadConfig(
     n_chains=3,
     n_fine_samples=30,
     subchain_lengths=(5, 3),
+    speculative_prefetch=True,
 )
 
 CONFIGS = {"paper": PAPER, "cpu": CPU}

@@ -32,9 +32,12 @@ from repro.balancer import (  # noqa: F401 - re-exports
     ServerDiedError,
     ServerStats,
     Telemetry,
+    as_completed,
     available_policies,
     create_policy,
+    gather,
     register_policy,
+    wait_any,
 )
 
 __all__ = [
@@ -52,7 +55,10 @@ __all__ = [
     "ServerDiedError",
     "ServerStats",
     "Telemetry",
+    "as_completed",
     "available_policies",
     "create_policy",
+    "gather",
     "register_policy",
+    "wait_any",
 ]

@@ -45,12 +45,15 @@ def save_sampler(
         "rng_state": rng.bit_generator.state,
         "proposal_state": sampler.proposal.state(),
         "subchain_lengths": sampler.subchain_lengths,
+        "n_speculated": sampler.n_speculated,
+        "n_spec_hits": sampler.n_spec_hits,
         "levels": [
             {
                 "n_evals": rec.n_evals,
                 "n_accepted": rec.n_accepted,
                 "n_proposed": rec.n_proposed,
                 "eval_seconds": rec.eval_seconds,
+                "n_spec_discarded": rec.n_spec_discarded,
                 "samples": [s.tolist() for s in rec.samples[-10000:]],
             }
             for rec in sampler.levels
@@ -79,11 +82,14 @@ def load_sampler(path: str, sampler: MLDASampler) -> Dict[str, Any]:
     with open(path) as f:
         state = json.load(f)
     sampler.proposal.restore(state["proposal_state"])
+    sampler.n_speculated = state.get("n_speculated", 0)
+    sampler.n_spec_hits = state.get("n_spec_hits", 0)
     for rec, saved in zip(sampler.levels, state["levels"]):
         rec.n_evals = saved["n_evals"]
         rec.n_accepted = saved["n_accepted"]
         rec.n_proposed = saved["n_proposed"]
         rec.eval_seconds = saved["eval_seconds"]
+        rec.n_spec_discarded = saved.get("n_spec_discarded", 0)
         rec.samples = [np.asarray(s) for s in saved["samples"]]
     rng = np.random.default_rng()
     rng.bit_generator.state = state["rng_state"]

@@ -36,19 +36,45 @@ def effective_sample_size(x: np.ndarray) -> float:
     return float(n / max(tau, 1.0))
 
 
-def gelman_rubin(chains: np.ndarray) -> float:
-    """R-hat across chains; ``chains`` is (n_chains, n_samples)."""
+def gelman_rubin(chains: np.ndarray, *, split: bool = True):
+    """Split-R-hat across chains (Gelman et al., BDA3 §11.4).
+
+    ``chains`` is ``(n_chains, n_samples)`` for scalar chains (returns a
+    float, as before) or ``(n_chains, n_samples, dim)`` for vector chains
+    (returns a ``(dim,)`` array — R-hat per coordinate).  With ``split``
+    (default) each chain is halved first, so within-chain non-stationarity
+    inflates the statistic instead of hiding in the within-chain variance;
+    this also makes the single-chain case well-defined.  Pass
+    ``split=False`` for the classic estimator (requires >= 2 chains, else
+    NaN).
+    """
     chains = np.asarray(chains, dtype=float)
-    m, n = chains.shape
+    if chains.ndim == 2:
+        return float(_rhat(chains[:, :, None], split)[0])
+    if chains.ndim != 3:
+        raise ValueError(
+            f"chains must be (n_chains, n_samples[, dim]), got {chains.shape}"
+        )
+    return _rhat(chains, split)
+
+
+def _rhat(chains: np.ndarray, split: bool) -> np.ndarray:
+    m, n, d = chains.shape
+    if split and n >= 4:
+        half = n // 2
+        chains = np.concatenate(
+            [chains[:, :half], chains[:, n - half :]], axis=0
+        )
+        m, n = 2 * m, half
     if m < 2:
-        return float("nan")
-    means = chains.mean(axis=1)
-    b = n * np.var(means, ddof=1)
-    w = np.mean(np.var(chains, axis=1, ddof=1))
-    if w == 0:
-        return 1.0
+        return np.full(d, float("nan"))
+    means = chains.mean(axis=1)  # (m, d)
+    b = n * means.var(axis=0, ddof=1)
+    w = chains.var(axis=1, ddof=1).mean(axis=0)
     var_plus = (n - 1) / n * w + b / n
-    return float(np.sqrt(var_plus / w))
+    with np.errstate(divide="ignore", invalid="ignore"):
+        out = np.sqrt(var_plus / w)
+    return np.where(w == 0, 1.0, out)
 
 
 def telescoping_estimate(level_samples: Sequence[np.ndarray]) -> Dict[str, np.ndarray]:

@@ -131,7 +131,6 @@ def fit_gp(
     y_scale = jnp.maximum(jnp.std(y2, axis=0), 1e-12)
     y_n = (y2 - y_mean) / y_scale
 
-    d = x.shape[1]
     # Median-heuristic lengthscale init.
     med = jnp.maximum(jnp.median(jnp.abs(x - jnp.median(x, axis=0)), axis=0), 1e-3)
     params = GPParams(
@@ -141,7 +140,6 @@ def fit_gp(
     )
 
     loss_fn = partial(neg_log_marginal_likelihood, x=x, y=y_n, jitter=jitter)
-    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
 
     # Minimal Adam (repro.optim is for the LM stack; keep core self-contained).
     m = jax.tree.map(jnp.zeros_like, params)

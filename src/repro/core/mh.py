@@ -118,6 +118,38 @@ class ChainStats:
         return self.n_accepted / max(self.n_proposed, 1)
 
 
+def mh_step_steps(
+    eval_steps: Callable,
+    proposal: Proposal,
+    rng: np.random.Generator,
+    theta: np.ndarray,
+    logp: float,
+    stats: Optional[ChainStats] = None,
+):
+    """Generator form of one MH transition (the step-machine building block).
+
+    ``eval_steps(cand)`` must be a sub-generator that yields pending
+    density-evaluation actions (see :class:`repro.core.mlda.PendingEval`)
+    and returns the log-density — the blocking :func:`mh_step` drives it
+    eagerly, the MLDA step machine forwards its yields to an async driver.
+    The RNG draw order (proposal sample, then accept uniform) is identical
+    to the blocking path, so chains are bit-for-bit reproducible either way.
+
+    Returns ``(theta', logp', accepted)`` via ``StopIteration.value``.
+    """
+    cand = np.asarray(proposal.sample(rng, theta))
+    logp_cand = yield from eval_steps(cand)
+    if stats is not None:
+        stats.n_proposed += 1
+        stats.n_evals += 1
+    log_alpha = float(logp_cand) - logp + proposal.log_ratio(cand, theta)
+    if np.log(rng.uniform()) < log_alpha:
+        if stats is not None:
+            stats.n_accepted += 1
+        return cand, float(logp_cand), True
+    return theta, logp, False
+
+
 def mh_step(
     log_post: Callable[[np.ndarray], float],
     proposal: Proposal,
@@ -127,17 +159,17 @@ def mh_step(
     stats: Optional[ChainStats] = None,
 ) -> Tuple[np.ndarray, float, bool]:
     """One MH transition; returns (theta', logp', accepted)."""
-    cand = np.asarray(proposal.sample(rng, theta))
-    logp_cand = float(log_post(cand))
-    if stats is not None:
-        stats.n_proposed += 1
-        stats.n_evals += 1
-    log_alpha = logp_cand - logp + proposal.log_ratio(cand, theta)
-    if np.log(rng.uniform()) < log_alpha:
-        if stats is not None:
-            stats.n_accepted += 1
-        return cand, logp_cand, True
-    return theta, logp, False
+
+    def eval_now(cand):
+        return float(log_post(cand))
+        yield  # unreachable — marks this as a sub-generator for yield-from
+
+    gen = mh_step_steps(eval_now, proposal, rng, theta, logp, stats)
+    try:
+        next(gen)
+    except StopIteration as e:
+        return e.value
+    raise RuntimeError("mh_step_steps yielded despite an eager evaluator")
 
 
 def metropolis_hastings(

@@ -1,0 +1,20 @@
+"""Multi-chain ensemble subsystem (DESIGN.md §8).
+
+One driver thread multiplexes N independent MLDA chains' step machines
+(:class:`repro.core.mlda.ChainState`) through a shared
+:class:`repro.core.balancer.LoadBalancer`: while one chain's fine solve is
+on a server, the other chains' coarse subchains keep the rest of the pool
+busy — the regime where the paper's millisecond idle times actually pay
+off (Seelinger et al., arXiv:2107.14552; Loi & Reinarz, arXiv:2503.22645).
+
+Entry points:
+
+* :class:`EnsembleRunner`  — drive N per-chain samplers (own proposal,
+  RNG stream, LevelRecords) to completion; returns an
+  :class:`EnsembleResult` with pooled cross-chain diagnostics;
+* :func:`repro.core.mlda.balanced_mlda` with ``n_chains > 1`` — builds the
+  runner and the shared balancer in one call.
+"""
+from .runner import EnsembleResult, EnsembleRunner
+
+__all__ = ["EnsembleResult", "EnsembleRunner"]

@@ -221,7 +221,6 @@ def batch_shardings(policy: ShardingPolicy, batch_tree, *, microbatched: bool = 
 
 def decode_state_spec(policy: ShardingPolicy, path, leaf) -> P:
     """KV caches (L,B,H,W,hd), ssm states (L,B,H,P,N): B on dp, H on model."""
-    name = _path_str(path)
     shape = leaf.shape
     nd = len(shape)
     if nd >= 4:

@@ -5,6 +5,7 @@ from .scenario import (
     make_hierarchy,
     train_level0_gp,
 )
+from .servers import make_level_servers
 from .solver import SWEConfig, SWEState, lake_at_rest_error, make_solver, step
 
 __all__ = [
@@ -14,6 +15,7 @@ __all__ = [
     "TohokuScenario",
     "lake_at_rest_error",
     "make_hierarchy",
+    "make_level_servers",
     "make_solver",
     "step",
     "train_level0_gp",

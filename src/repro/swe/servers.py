@@ -1,0 +1,39 @@
+"""Server-pool wiring for the Tōhoku MLDA workload (DESIGN.md §8).
+
+Shared by ``examples/tsunami_inversion.py`` and
+``benchmarks/bench_mlda.py`` so the example and the benchmark always
+measure the same pool layout (``MLDAWorkloadConfig.servers_per_level``).
+"""
+from __future__ import annotations
+
+from typing import Callable, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.balancer import Server
+
+
+def make_level_servers(w, gp: Callable, f_coarse: Callable, f_fine: Callable) -> List[Server]:
+    """One GP server + the config's per-level coarse/fine SWE servers.
+
+    ``np.asarray`` forces each (async-dispatched) jax solve to materialise
+    ON the worker thread: the server's busy interval covers the real
+    compute and the GIL is released while XLA runs, so solves from
+    different chains genuinely overlap.
+    """
+    servers = [
+        Server(lambda t: np.asarray(gp(jnp.asarray(t))), name="gp-0",
+               capacity_tags=("level0",))
+    ]
+    for i in range(max(w.servers_per_level.get(1, 1), 1)):
+        servers.append(
+            Server(lambda t: np.asarray(f_coarse(jnp.asarray(t))),
+                   name=f"coarse-{i}", capacity_tags=("level1",))
+        )
+    for i in range(max(w.servers_per_level.get(2, 1), 1)):
+        servers.append(
+            Server(lambda t: np.asarray(f_fine(jnp.asarray(t))),
+                   name=f"fine-{i}", capacity_tags=("level2",))
+        )
+    return servers

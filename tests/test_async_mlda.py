@@ -1,0 +1,288 @@
+"""Step-machine MLDA ≡ blocking recursive MLDA, bit-for-bit (DESIGN.md §8).
+
+``ReferenceMLDASampler`` below is a verbatim transcription of the
+pre-refactor blocking implementation (``MLDASampler._subchain`` recursion,
+as shipped before the async pipeline): it is the recorded ground truth the
+step machine must reproduce *exactly* — same chains, same per-level
+eval/proposal/acceptance counts — at fixed RNG.  A second battery checks
+that speculative prefetch changes nothing either (wrong guesses rewind the
+RNG stream and bookkeeping), and that the ChainState driver contract holds.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ChainState, GaussianRandomWalk, MLDASampler
+from repro.core.mh import AdaptiveMetropolis
+
+
+# --------------------------------------------------------------------------
+# reference: the pre-refactor blocking recursion, verbatim
+# --------------------------------------------------------------------------
+class ReferenceMLDASampler:
+    _CACHE_MAX = 4096
+
+    def __init__(self, log_posteriors, proposal, subchain_lengths,
+                 randomize=True, adapt=False):
+        self.log_posteriors = list(log_posteriors)
+        self.proposal = proposal
+        self.subchain_lengths = list(subchain_lengths)
+        self.randomize = randomize
+        self.adapt = adapt
+        from repro.core.mlda import LevelRecord
+
+        self.levels = [LevelRecord() for _ in log_posteriors]
+
+    def _eval(self, level, theta):
+        cache = getattr(self, "_cache", None)
+        if cache is None:
+            cache = self._cache = {}
+        key = (level, np.asarray(theta, dtype=float).tobytes())
+        if key in cache:
+            return cache[key]
+        v = float(self.log_posteriors[level](theta))
+        rec = self.levels[level]
+        rec.n_evals += 1
+        if len(cache) >= self._CACHE_MAX:
+            cache.pop(next(iter(cache)))
+        cache[key] = v
+        return v
+
+    def _subchain(self, level, theta, logp, length, rng):
+        rec = self.levels[level]
+        if level == 0:
+            for _ in range(length):
+                cand = np.asarray(self.proposal.sample(rng, theta))
+                logp_cand = self._eval(0, cand)
+                rec.n_proposed += 1
+                log_alpha = logp_cand - logp + self.proposal.log_ratio(cand, theta)
+                if np.log(rng.uniform()) < log_alpha:
+                    theta, logp = cand, logp_cand
+                    rec.n_accepted += 1
+                if self.adapt and hasattr(self.proposal, "update"):
+                    self.proposal.update(theta)
+                rec.samples.append(theta.copy())
+            return theta, logp
+
+        lower = level - 1
+        logp_lower = self._eval(lower, theta)
+        for _ in range(length):
+            n_sub = self._draw_subchain_length(level, rng)
+            psi, logp_psi_lower = self._subchain(lower, theta, logp_lower, n_sub, rng)
+            rec.n_proposed += 1
+            if np.all(psi == theta):
+                rec.samples.append(theta.copy())
+                continue
+            logp_psi = self._eval(level, psi)
+            log_alpha = (logp_psi - logp) + (logp_lower - logp_psi_lower)
+            if np.log(rng.uniform()) < log_alpha:
+                theta, logp = psi, logp_psi
+                logp_lower = logp_psi_lower
+                rec.n_accepted += 1
+            rec.samples.append(theta.copy())
+        return theta, logp
+
+    def _draw_subchain_length(self, level, rng):
+        n = self.subchain_lengths[level - 1]
+        if not self.randomize or n <= 1:
+            return n
+        return int(rng.integers(1, 2 * n))
+
+    def sample(self, theta0, n_samples, rng):
+        theta = np.asarray(theta0, dtype=float)
+        top = len(self.log_posteriors) - 1
+        logp = self._eval(top, theta)
+        out = np.empty((n_samples, theta.size))
+        for j in range(n_samples):
+            theta, logp = self._subchain(top, theta, logp, 1, rng)
+            out[j] = theta
+        return out
+
+
+def coarse0(t):
+    return float(-0.6 * np.sum((np.asarray(t) - 0.5) ** 2))
+
+
+def coarse1(t):
+    return float(-0.45 * np.sum((np.asarray(t) - 0.2) ** 2))
+
+
+def fine(t):
+    return float(-0.5 * np.sum(np.asarray(t) ** 2))
+
+
+def assert_same_books(ref, new):
+    for lvl, (a, b) in enumerate(zip(ref.levels, new.levels)):
+        assert a.n_evals == b.n_evals, f"level {lvl} n_evals"
+        assert a.n_proposed == b.n_proposed, f"level {lvl} n_proposed"
+        assert a.n_accepted == b.n_accepted, f"level {lvl} n_accepted"
+        assert len(a.samples) == len(b.samples), f"level {lvl} samples"
+        for x, y in zip(a.samples, b.samples):
+            assert np.array_equal(x, y)
+
+
+# --------------------------------------------------------------------------
+# recorded-RNG equivalence
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 7, 42])
+def test_step_machine_reproduces_blocking_sampler_bitwise(seed):
+    ref = ReferenceMLDASampler([coarse0, coarse1, fine], GaussianRandomWalk(1.0), [4, 3])
+    a = ref.sample(np.zeros(2), 300, np.random.default_rng(seed))
+    new = MLDASampler([coarse0, coarse1, fine], GaussianRandomWalk(1.0), [4, 3])
+    b = new.sample(np.zeros(2), 300, np.random.default_rng(seed))
+    assert np.array_equal(a, b), "chains diverged from the recorded reference"
+    assert_same_books(ref, new)
+
+
+def test_equivalence_two_levels_and_no_randomize():
+    ref = ReferenceMLDASampler(
+        [coarse0, fine], GaussianRandomWalk(0.8), [3], randomize=False
+    )
+    a = ref.sample(np.ones(3), 200, np.random.default_rng(1))
+    new = MLDASampler(
+        [coarse0, fine], GaussianRandomWalk(0.8), [3], randomize=False
+    )
+    b = new.sample(np.ones(3), 200, np.random.default_rng(1))
+    assert np.array_equal(a, b)
+    assert_same_books(ref, new)
+
+
+def test_equivalence_single_level_plain_mh():
+    ref = ReferenceMLDASampler([fine], GaussianRandomWalk(1.0), [])
+    a = ref.sample(np.zeros(2), 400, np.random.default_rng(3))
+    new = MLDASampler([fine], GaussianRandomWalk(1.0), [])
+    b = new.sample(np.zeros(2), 400, np.random.default_rng(3))
+    assert np.array_equal(a, b)
+    assert_same_books(ref, new)
+
+
+def test_equivalence_with_adaptive_proposal():
+    ref = ReferenceMLDASampler(
+        [coarse0, fine], AdaptiveMetropolis(dim=2, adapt_start=20), [3], adapt=True
+    )
+    a = ref.sample(np.zeros(2), 150, np.random.default_rng(5))
+    s = MLDASampler(
+        [coarse0, fine], AdaptiveMetropolis(dim=2, adapt_start=20), [3], adapt=True
+    )
+    b = s.sample(np.zeros(2), 150, np.random.default_rng(5))
+    assert np.array_equal(a, b)
+
+
+# --------------------------------------------------------------------------
+# speculative prefetch: identical chains, telemetry of discarded work
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 11])
+def test_speculative_prefetch_is_bit_identical(seed):
+    base = MLDASampler([coarse0, coarse1, fine], GaussianRandomWalk(1.0), [4, 3])
+    a = base.sample(np.zeros(2), 300, np.random.default_rng(seed))
+    spec = MLDASampler(
+        [coarse0, coarse1, fine], GaussianRandomWalk(1.0), [4, 3], speculative=True
+    )
+    b = spec.sample(np.zeros(2), 300, np.random.default_rng(seed))
+    assert np.array_equal(a, b), "speculation changed the chain"
+    # chain bookkeeping identical; speculation telemetry populated
+    for lvl in range(3):
+        assert base.levels[lvl].n_proposed == spec.levels[lvl].n_proposed
+        assert base.levels[lvl].n_accepted == spec.levels[lvl].n_accepted
+    s = spec.speculation_summary()
+    assert s["n_speculated"] > 0
+    assert 0 <= s["n_spec_hits"] <= s["n_speculated"]
+    if s["n_spec_hits"] < s["n_speculated"]:  # any miss must book waste
+        assert sum(s["discarded_evals_per_level"]) > 0
+    # the fine level never runs speculatively (only coarse prefetch)
+    assert spec.levels[2].n_spec_discarded == 0
+
+
+def test_speculative_adaptive_proposal_rewinds_cleanly():
+    base = MLDASampler(
+        [coarse0, fine], AdaptiveMetropolis(dim=2, adapt_start=10), [4], adapt=True
+    )
+    a = base.sample(np.zeros(2), 200, np.random.default_rng(2))
+    spec = MLDASampler(
+        [coarse0, fine], AdaptiveMetropolis(dim=2, adapt_start=10), [4],
+        adapt=True, speculative=True,
+    )
+    b = spec.sample(np.zeros(2), 200, np.random.default_rng(2))
+    assert np.array_equal(a, b)
+    assert np.allclose(base.proposal._cov, spec.proposal._cov)
+    assert base.proposal._n == spec.proposal._n
+
+
+# --------------------------------------------------------------------------
+# ChainState driver contract
+# --------------------------------------------------------------------------
+def test_chainstate_yields_pending_evals_and_finishes():
+    s = MLDASampler([coarse0, fine], GaussianRandomWalk(1.0), [2])
+    rng = np.random.default_rng(0)
+    chain = ChainState(s, np.zeros(2), 20, rng)
+    kinds = set()
+    action = chain.step()
+    n_actions = 0
+    while action is not None:
+        kind, pe = action
+        kinds.add(kind)
+        assert pe.level in (0, 1)
+        if not pe.done:
+            pe.resolve(float(s.log_posteriors[pe.level](pe.theta)))
+        action = chain.step()
+        n_actions += 1
+    assert chain.done
+    assert kinds == {"eval"}  # non-speculative machine only blocks
+    assert chain.samples().shape == (20, 2)
+    assert chain.samples_drawn == 20
+    assert n_actions >= 20
+
+
+def test_chainstate_speculative_uses_submit_await():
+    s = MLDASampler([coarse0, fine], GaussianRandomWalk(1.0), [3], speculative=True)
+    chain = ChainState(s, np.zeros(2), 30, np.random.default_rng(4))
+    kinds = set()
+    action = chain.step()
+    while action is not None:
+        kind, pe = action
+        kinds.add(kind)
+        if not pe.done:
+            pe.resolve(float(s.log_posteriors[pe.level](pe.theta)))
+        action = chain.step()
+    assert {"submit", "await"} <= kinds, "speculation never split a fine solve"
+
+
+def test_chainstate_rejects_concurrent_chains_on_one_sampler():
+    s = MLDASampler([fine], GaussianRandomWalk(1.0), [])
+    c1 = ChainState(s, np.zeros(2), 10, np.random.default_rng(0))
+    with pytest.raises(RuntimeError, match="live ChainState"):
+        ChainState(s, np.zeros(2), 10, np.random.default_rng(1))
+    # drive c1 to completion; a new chain is then allowed
+    action = c1.step()
+    while action is not None:
+        _, pe = action
+        if not pe.done:
+            pe.resolve(float(s.log_posteriors[pe.level](pe.theta)))
+        action = c1.step()
+    c2 = ChainState(s, np.zeros(2), 5, np.random.default_rng(1))
+    assert c2.samples_drawn == 0
+
+
+def test_unresolved_eval_is_an_error():
+    s = MLDASampler([fine], GaussianRandomWalk(1.0), [])
+    chain = ChainState(s, np.zeros(2), 5, np.random.default_rng(0))
+    chain.step()  # yields an eval we deliberately do not resolve
+    with pytest.raises(RuntimeError, match="unresolved"):
+        chain.step()
+
+
+def test_checkpoint_roundtrips_spec_counter(tmp_path):
+    from repro.core.checkpoint import load_sampler, save_sampler
+
+    s = MLDASampler(
+        [coarse0, coarse1, fine], GaussianRandomWalk(1.0), [4, 3], speculative=True
+    )
+    rng = np.random.default_rng(9)
+    chain = s.sample(np.zeros(2), 60, rng)
+    path = str(tmp_path / "spec.json")
+    save_sampler(path, s, rng, theta=chain[-1], step=60)
+    s2 = MLDASampler(
+        [coarse0, coarse1, fine], GaussianRandomWalk(1.0), [4, 3], speculative=True
+    )
+    load_sampler(path, s2)
+    for a, b in zip(s.levels, s2.levels):
+        assert a.n_spec_discarded == b.n_spec_discarded

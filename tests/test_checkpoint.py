@@ -81,7 +81,6 @@ def test_atomic_no_partial_file(tmp_path):
     cfg, step_fn, params, opt = _setup()
     path = str(tmp_path / "atomic.npz")
     save(path, (params, opt), step=1)
-    before = os.path.getmtime(path)
     save(path, (params, opt), step=2)
     (_, _), step, _ = restore(path, (params, opt))
     assert step == 2

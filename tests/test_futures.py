@@ -1,0 +1,291 @@
+"""Futures-based client API + worker-pool elasticity (DESIGN.md §2, §8).
+
+Covers the async client layer this PR adds to the dispatcher:
+``submit_many`` batch admission, ``wait_any`` / ``as_completed`` /
+``gather`` under normal completion, balancer shutdown and server death,
+the batched-dispatch latency fix (no coalescing window when there is
+nothing to coalesce), and worker-pool shrink on ``retire_server``.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.balancer import (
+    LoadBalancer,
+    Server,
+    ServerDiedError,
+    as_completed,
+    gather,
+    wait_any,
+)
+
+
+def make_worker(duration=0.0, fail=False):
+    def fn(x):
+        if fail:
+            raise RuntimeError("injected fault")
+        if duration:
+            time.sleep(duration)
+        return x * 2
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# wait_any / as_completed / gather
+# --------------------------------------------------------------------------
+def test_wait_any_returns_first_completion():
+    release = threading.Event()
+    lb = LoadBalancer(
+        [
+            Server(lambda x: (release.wait(5), x)[1], name="slow"),
+            Server(make_worker(), name="fast"),
+        ]
+    )
+    slow = lb.submit_async(1)
+    time.sleep(0.01)  # slow server picks up the first request
+    fast = lb.submit_async(2)
+    done = wait_any([slow, fast], timeout=5)
+    assert done == [fast]
+    assert lb.result(fast) == 4
+    release.set()
+    assert lb.result(slow, timeout=5) == 1
+    # both done now: wait_any returns the full done subset immediately
+    assert wait_any([slow, fast]) == [slow, fast]
+    lb.shutdown()
+
+
+def test_wait_any_timeout_and_empty():
+    assert wait_any([]) == []
+    release = threading.Event()
+    lb = LoadBalancer([Server(lambda x: (release.wait(5), x)[1])])
+    req = lb.submit_async(1)
+    with pytest.raises(TimeoutError):
+        wait_any([req], timeout=0.05)
+    release.set()
+    assert lb.result(req, timeout=5) == 1
+    lb.shutdown()
+
+
+def test_as_completed_yields_in_completion_order():
+    gates = {i: threading.Event() for i in range(3)}
+    lb = LoadBalancer(
+        [Server(lambda x: (gates[x].wait(5), x)[1], name=f"s{i}") for i in range(3)]
+    )
+    reqs = [lb.submit_async(i) for i in range(3)]
+    order = []
+    it = as_completed(reqs, timeout=5)
+    for i in (2, 0, 1):
+        gates[i].set()
+        r = next(it)
+        order.append(r.theta)
+    assert order == [2, 0, 1]
+    assert list(it) == []
+    lb.shutdown()
+
+
+def test_wait_any_deregisters_its_callbacks():
+    """Repeated waits over a long-pending request must not accumulate
+    closures on it (the multiplexing-driver usage pattern)."""
+    release = threading.Event()
+    lb = LoadBalancer(
+        [
+            Server(lambda x: (release.wait(5), x)[1], name="slow"),
+            Server(make_worker(), name="fast"),
+        ]
+    )
+    slow = lb.submit_async("s")
+    time.sleep(0.01)
+    for i in range(20):  # 20 wait rounds against the same pending request
+        fast = lb.submit_async(i)
+        assert wait_any([slow, fast], timeout=5) == [fast]
+    assert len(slow._callbacks) == 0, "stale callbacks accumulated"
+    release.set()
+    assert lb.result(slow, timeout=5) == "s"
+    lb.shutdown()
+
+
+def test_as_completed_total_timeout():
+    release = threading.Event()
+    lb = LoadBalancer([Server(lambda x: (release.wait(5), x)[1])])
+    reqs = [lb.submit_async(1)]
+    with pytest.raises(TimeoutError):
+        list(as_completed(reqs, timeout=0.05))
+    release.set()
+    lb.shutdown()
+
+
+def test_gather_preserves_input_order():
+    lb = LoadBalancer([Server(make_worker(0.001), name=f"s{i}") for i in range(2)])
+    reqs = lb.submit_many(range(8), tag="")
+    out = gather(reqs, timeout=5)
+    assert [lb.result(r) for r in out] == [2 * i for i in range(8)]
+    lb.shutdown()
+
+
+# --------------------------------------------------------------------------
+# submit_many
+# --------------------------------------------------------------------------
+def test_submit_many_dispatches_all():
+    lb = LoadBalancer([Server(make_worker()) for _ in range(3)])
+    reqs = lb.submit_many(range(20))
+    assert [lb.result(r, timeout=5) for r in reqs] == [2 * i for i in range(20)]
+    assert lb.summary()["n_requests"] == 20
+    lb.shutdown()
+
+
+def test_submit_many_unservable_tag_fails_all():
+    lb = LoadBalancer([Server(make_worker(), capacity_tags=("gp",))])
+    reqs = lb.submit_many(range(4), tag="pde")
+    for r in reqs:
+        assert r.done.is_set()
+        with pytest.raises(RuntimeError, match="no live server accepts"):
+            lb.result(r)
+    lb.shutdown()
+
+
+def test_submit_many_after_shutdown_fails_all():
+    lb = LoadBalancer([Server(make_worker())])
+    lb.shutdown()
+    reqs = lb.submit_many(range(3))
+    for r in reqs:
+        with pytest.raises(RuntimeError, match="shut down"):
+            lb.result(r)
+
+
+# --------------------------------------------------------------------------
+# shutdown / server death through the futures API
+# --------------------------------------------------------------------------
+def test_wait_any_surfaces_shutdown_errors():
+    release = threading.Event()
+    lb = LoadBalancer([Server(lambda x: (release.wait(5), x)[1])])
+    running = lb.submit_async(1)  # occupies the only server
+    time.sleep(0.01)
+    queued = lb.submit_async(2)  # will be failed by shutdown
+
+    t = threading.Thread(target=lb.shutdown)
+    t.start()
+    done = wait_any([queued], timeout=5)
+    assert done == [queued] and isinstance(queued.error, RuntimeError)
+    release.set()
+    t.join(5)
+    assert lb.result(running, timeout=1) == 1
+
+
+def test_as_completed_surfaces_server_death():
+    lb = LoadBalancer([Server(make_worker(fail=True))], max_retries=0)
+    reqs = lb.submit_many(range(3))
+    seen = {"ok": 0, "err": 0}
+    for r in as_completed(reqs, timeout=5):
+        if r.error is None:
+            seen["ok"] += 1
+        else:
+            assert isinstance(r.error, (ServerDiedError, RuntimeError))
+            seen["err"] += 1
+    # first request kills the server; the rest become unservable
+    assert seen["err"] == 3 and seen["ok"] == 0
+    lb.shutdown()
+
+
+# --------------------------------------------------------------------------
+# batched-dispatch latency fix
+# --------------------------------------------------------------------------
+def test_lone_batchable_request_skips_coalescing_window():
+    """A batchable request with no queued same-tag peer must not pay
+    ``batch_window_s`` waiting for peers that are not coming."""
+    window = 0.3
+
+    def batched(xs):
+        return [x * 2 for x in xs]
+
+    lb = LoadBalancer(
+        [Server(make_worker(), batch_fn=batched)],
+        batch_window_s=window,
+        max_batch=16,
+    )
+    t0 = time.monotonic()
+    assert lb.submit(1, tag="gp", batchable=True) == 2
+    assert time.monotonic() - t0 < window / 2, "paid the window with no peer"
+    lb.shutdown()
+
+
+def test_batching_still_coalesces_queued_peers():
+    calls = []
+
+    def batched(xs):
+        calls.append(len(xs))
+        return [x * 2 for x in xs]
+
+    lb = LoadBalancer(
+        [Server(make_worker(), batch_fn=batched)],
+        batch_window_s=0.05,
+        max_batch=64,
+    )
+    reqs = lb.submit_many(range(12), tag="gp", batchable=True)
+    assert [lb.result(r, timeout=5) for r in reqs] == [2 * i for i in range(12)]
+    assert max(calls, default=1) > 1, "no request coalescing happened"
+    lb.shutdown()
+
+
+# --------------------------------------------------------------------------
+# worker-pool shrink (satellite: retire_server used to leak idle workers)
+# --------------------------------------------------------------------------
+def _settle(predicate, timeout=5.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(0.01)
+    return predicate()
+
+
+def test_retire_server_parks_excess_workers():
+    baseline = threading.active_count()
+    lb = LoadBalancer([Server(make_worker(), name=f"s{i}") for i in range(4)])
+    reqs = lb.submit_many(range(8))
+    assert [lb.result(r, timeout=5) for r in reqs] == [2 * i for i in range(8)]
+    # engine running: dispatcher + one worker per live server
+    assert _settle(lambda: threading.active_count() == baseline + 5)
+
+    lb.retire_server("s2")
+    lb.retire_server("s3")
+    assert _settle(lambda: threading.active_count() == baseline + 3), (
+        "excess workers kept running after retire_server"
+    )
+
+    # the shrunken pool still serves traffic on the remaining servers
+    reqs = lb.submit_many(range(8))
+    assert [lb.result(r, timeout=5) for r in reqs] == [2 * i for i in range(8)]
+    lb.shutdown()
+    assert threading.active_count() == baseline
+
+
+def test_pool_regrows_after_shrink():
+    baseline = threading.active_count()
+    lb = LoadBalancer([Server(make_worker(), name=f"s{i}") for i in range(2)])
+    lb.submit(1)
+    lb.retire_server("s1")
+    assert _settle(lambda: threading.active_count() == baseline + 2)
+    lb.add_server(Server(make_worker(), name="s2"))
+    lb.add_server(Server(make_worker(), name="s3"))
+    assert _settle(lambda: threading.active_count() == baseline + 4)
+    reqs = lb.submit_many(range(6))
+    assert [lb.result(r, timeout=5) for r in reqs] == [2 * i for i in range(6)]
+    lb.shutdown()
+    assert threading.active_count() == baseline
+
+
+def test_server_death_also_shrinks_pool():
+    baseline = threading.active_count()
+    flaky = Server(make_worker(fail=True), name="flaky")
+    ok = Server(make_worker(), name="ok")
+    lb = LoadBalancer([flaky, ok], max_retries=2)
+    reqs = lb.submit_many(range(6))
+    assert [lb.result(r, timeout=5) for r in reqs] == [2 * i for i in range(6)]
+    assert flaky.dead
+    assert _settle(lambda: threading.active_count() == baseline + 2), (
+        "dead server's worker kept running"
+    )
+    lb.shutdown()
+    assert threading.active_count() == baseline
