@@ -1,0 +1,197 @@
+"""Batched forward-solve engine benchmark (DESIGN.md §2: coalesced dispatch).
+
+Measures, per MLDA level of the CPU-scaled Tōhoku workload:
+
+* **raw executable throughput** (solves/s) of the stacked batch path at
+  batch sizes 1/2/4/8 — the vmapped AOT executables of
+  ``TohokuScenario.build_batch_forward`` / ``GaussianProcess.batch_call``;
+* **dispatch throughput**: the same request stream pushed through the
+  ``LoadBalancer`` per-request vs coalesced onto a ``BatchServer``
+  (adaptive window, ``max_batch=8``), i.e. the end-to-end engine win.
+
+Writes ``benchmarks/BENCH_batch.json`` so the perf trajectory is tracked.
+
+``--smoke`` runs the CI-sized workload and exits non-zero unless batched
+dispatch reaches ``--min-ratio`` (default 2x) the per-request solve
+throughput at batch 8 on the gate level.  The gate rides on **level 0**
+(the GP surrogate solve): its win comes from amortising per-request
+dispatch + launch overhead, which holds on any hardware including the
+2-core CI box.  The PDE levels' stacked-vmap win is recorded but not
+gated — it scales with accelerator width (one fused launch only beats B
+sequential launches when the hardware has parallel width to spend;
+a 2-core CPU is already saturated by one solve).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.balancer import BatchServer, LoadBalancer, Server
+from repro.swe import TohokuScenario, make_hierarchy, train_level0_gp
+
+BATCH_SIZES = (1, 2, 4, 8)
+
+
+def _throughput(fn: Callable[[], None], *, reps: int, n_solves: int) -> float:
+    fn()  # warm (compile caches, thread pools)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return n_solves * reps / (time.perf_counter() - t0)
+
+
+def bench_raw(batch_forward: Callable, thetas: np.ndarray, reps: int) -> Dict[str, float]:
+    """Stacked-executable solves/s at each batch size."""
+    out = {}
+    for bsz in BATCH_SIZES:
+        ths = jnp.asarray(thetas[:bsz])
+        out[str(bsz)] = _throughput(
+            lambda: np.asarray(batch_forward(ths)), reps=reps, n_solves=bsz
+        )
+    return out
+
+
+def bench_dispatch(
+    single: Callable,
+    batch_forward: Callable,
+    thetas: np.ndarray,
+    *,
+    max_batch: int = 8,
+) -> Dict[str, object]:
+    """End-to-end balancer throughput: per-request vs coalesced dispatch."""
+    n = len(thetas)
+
+    def run(servers: List[Server], batchable: bool):
+        lb = LoadBalancer(servers, batch_window_s=0.005, max_batch=max_batch)
+        lb.submit(thetas[0], tag="lvl", batchable=batchable)  # warm
+        t0 = time.perf_counter()
+        reqs = lb.submit_many(list(thetas), tag="lvl", batchable=batchable)
+        for r in reqs:
+            lb.result(r)
+        wall = time.perf_counter() - t0
+        hist = lb.telemetry.batch_histogram("lvl")
+        lb.shutdown()
+        return n / wall, hist
+
+    per_request, _ = run(
+        [Server(lambda t: np.asarray(single(jnp.asarray(t))))], False
+    )
+    batched, hist = run(
+        [BatchServer(
+            lambda ts: np.asarray(batch_forward(jnp.asarray(ts))),
+            max_batch=max_batch,
+        )],
+        True,
+    )
+    return {
+        "per_request_solves_per_s": per_request,
+        "batched_solves_per_s": batched,
+        "ratio": batched / per_request,
+        "batch_histogram": hist,
+    }
+
+
+def main(smoke: bool = False, min_ratio: float = 2.0, fine: Optional[bool] = None):
+    if fine is None:
+        fine = not smoke
+    coarse_sc = TohokuScenario(nx=32, ny=32, t_end=7200.0)
+    fine_sc = TohokuScenario(nx=64, ny=64, t_end=7200.0)
+    h = make_hierarchy(fine=fine_sc, coarse=coarse_sc)
+    gp = train_level0_gp(
+        h["forward_coarse"], h["problem"],
+        n_train=32 if smoke else 128, steps=20 if smoke else 60,
+    )
+    rng = np.random.default_rng(0)
+    thetas = rng.uniform(-150.0, 150.0, size=(128 if smoke else 256, 2))
+
+    levels: Dict[str, Dict] = {}
+    rows: List[str] = []
+
+    # level 0: GP surrogate — the gate level (overhead-dominated solves).
+    lvl0 = {
+        "raw": bench_raw(gp.batch_call, thetas, reps=8),
+        "dispatch": bench_dispatch(gp, gp.batch_call, thetas),
+    }
+    levels["level0"] = lvl0
+
+    # level 1: coarse SWE (32x32) — stacked vmap, hardware-width bound.
+    n1 = 16 if smoke else 48
+    lvl1 = {
+        "raw": bench_raw(h["forward_coarse_batch"], thetas, reps=2),
+        "dispatch": bench_dispatch(
+            h["forward_coarse"], h["forward_coarse_batch"], thetas[:n1]
+        ),
+    }
+    levels["level1"] = lvl1
+
+    # level 2: fine SWE (64x64) — skipped in smoke (AOT compiles dominate).
+    if fine:
+        levels["level2"] = {
+            "raw": bench_raw(h["forward_fine_batch"], thetas, reps=1),
+            "dispatch": bench_dispatch(
+                h["forward_fine"], h["forward_fine_batch"], thetas[:8]
+            ),
+        }
+
+    for name, lvl in levels.items():
+        for bsz, sps in lvl["raw"].items():
+            rows.append(f"batch_{name}_raw_b{bsz},{sps:.1f},solves/s")
+        d = lvl["dispatch"]
+        rows.append(
+            f"batch_{name}_dispatch_per_request,"
+            f"{d['per_request_solves_per_s']:.1f},solves/s"
+        )
+        rows.append(
+            f"batch_{name}_dispatch_batched,"
+            f"{d['batched_solves_per_s']:.1f},solves/s"
+        )
+        rows.append(f"batch_{name}_dispatch_ratio,{d['ratio']:.2f},x")
+
+    gate_ratio = levels["level0"]["dispatch"]["ratio"]
+    payload = {
+        "workload": "smoke" if smoke else "cpu",
+        "batch_sizes": list(BATCH_SIZES),
+        "levels": levels,
+        "gate": {
+            "level": "level0",
+            "metric": "dispatch ratio (batched / per-request solves/s)",
+            "min_ratio": min_ratio,
+            "ratio": gate_ratio,
+            "pass": gate_ratio >= min_ratio,
+        },
+    }
+    out_path = os.path.join(os.path.dirname(__file__), "BENCH_batch.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    rows.append(f"batch_gate_ratio,{gate_ratio:.2f},x")
+    rows.append(f"batch_bench_json,{out_path},path")
+    return rows, payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run; fails unless batched dispatch "
+                         "reaches --min-ratio x per-request throughput at "
+                         "batch 8 on the gate level")
+    ap.add_argument("--min-ratio", type=float, default=2.0)
+    ap.add_argument("--fine", action="store_true",
+                    help="include the fine (64x64) level even with --smoke")
+    args = ap.parse_args()
+    rows, payload = main(
+        smoke=args.smoke, min_ratio=args.min_ratio,
+        fine=args.fine or None,
+    )
+    for row in rows:
+        print(row)
+    if args.smoke and not payload["gate"]["pass"]:
+        raise SystemExit(
+            f"batched dispatch ratio {payload['gate']['ratio']:.2f}x "
+            f"< gate {payload['gate']['min_ratio']}x"
+        )

@@ -95,8 +95,14 @@ def run_utilization(
     The 1-chain run keeps speculation off — it is the paper-faithful
     blocking client this PR's async pipeline is measured against; the
     multi-chain run uses the full pipeline (ensemble multiplexing +
-    configured speculative prefetch).
+    configured speculative prefetch).  Batched coalescing stays OFF here
+    on purpose: this benchmark isolates the scheduling-overlap win, and a
+    coalesced batch books one busy interval for B solves, which would mix
+    the two effects — ``bench_batch.py`` measures the batching win.
     """
+    import dataclasses
+
+    w = dataclasses.replace(w, batch_solves=False)
     servers = make_level_servers(w, gp, f_coarse, f_fine)
     runner, lb = balanced_mlda(
         servers,

@@ -5,6 +5,7 @@
 Prints ``name,value,unit`` CSV rows:
   * bench_balancer  -> paper Fig. 8 (timeline) + Fig. 9 (idle times)
   * bench_mlda      -> paper Table 1 (per-level counts / E / V)
+  * bench_batch     -> batched forward-solve engine (coalesced dispatch)
   * bench_kernels   -> kernel micro-bench (CPU wall; TPU story in §Roofline)
   * bench_gp        -> GP surrogate accuracy/fit time (paper §6.1)
   * roofline        -> per-cell roofline fractions from the dry-run JSONs
@@ -21,17 +22,26 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="skip the MLDA PDE bench")
     ap.add_argument(
-        "--only", default="", help="comma-separated subset (balancer,mlda,kernels,gp,roofline)"
+        "--only", default="",
+        help="comma-separated subset (balancer,mlda,batch,kernels,gp,roofline)"
     )
     args = ap.parse_args()
 
-    from benchmarks import bench_balancer, bench_gp, bench_kernels, bench_mlda, roofline
+    from benchmarks import (
+        bench_balancer,
+        bench_batch,
+        bench_gp,
+        bench_kernels,
+        bench_mlda,
+        roofline,
+    )
 
     sections = {
         "balancer": bench_balancer.main,
         "kernels": bench_kernels.main,
         "gp": bench_gp.main,
         "mlda": bench_mlda.main,
+        "batch": lambda: bench_batch.main(smoke=True)[0],
         "roofline": roofline.main,
     }
     if args.fast:

@@ -8,7 +8,6 @@ Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
 (~100M params is slow on 1 CPU core; --tiny uses the reduced config.)
 """
 import argparse
-import dataclasses
 import subprocess
 import sys
 

@@ -9,6 +9,18 @@ the fine solves of another on the shared server pool) -> posterior vs the
 known source + per-level Table-1 stats + split-R-hat/ESS cross-chain
 diagnostics + Fig. 9 idle times + the Fig. 6 time-series GP.
 
+Batched solves (``MLDAWorkloadConfig.batch_solves``, default on): every
+level's servers are ``BatchServer``s, so same-level solves pending from
+different chains coalesce into ONE stacked evaluation — a single vmapped
+AOT executable launch for the whole batch (GP: one kernel assembly; SWE:
+one fused batched time loop, cached per power-of-two batch size up to
+``max_batch``).  The dispatcher sizes its coalescing window adaptively
+from the level's EWMA service time, capped at ``batch_window_s``; chains
+are bit-identical (fp32) to per-request dispatch either way, and the
+realised batch sizes print at the end (``batch_histogram``).  Disable
+with ``batch_solves=False`` to compare; ``benchmarks/bench_batch.py``
+measures the throughput win.
+
 Run:  PYTHONPATH=src python examples/tsunami_inversion.py  (~5-10 min CPU)
 """
 import argparse
@@ -62,8 +74,14 @@ def main():
     print(f"      {time.time() - t0:.1f}s")
 
     print(f"[3/4] MLDA x {n_chains} chains via the ensemble driver "
-          f"(policy={policy}, speculative={w.speculative_prefetch})")
-    servers = make_level_servers(w, gp, f_coarse, f_fine)
+          f"(policy={policy}, speculative={w.speculative_prefetch}, "
+          f"batch_solves={w.batch_solves})")
+    servers = make_level_servers(
+        w, gp, f_coarse, f_fine,
+        batch_forwards=(
+            None, h["forward_coarse_batch"], h["forward_fine_batch"]
+        ) if w.batch_solves else None,
+    )
 
     runner, lb = balanced_mlda(
         servers,
@@ -72,10 +90,12 @@ def main():
         GaussianRandomWalk(w.rw_step_km),
         list(w.subchain_lengths),
         policy=policy,
+        batchable_levels=w.batchable_levels,
         n_chains=n_chains,
         ensemble_seed=w.ensemble_seed,
         speculative=w.speculative_prefetch,
         as_runner=True,
+        **w.batch_kwargs(),
     )
     t0 = time.time()
     result = runner.run(
@@ -117,6 +137,9 @@ def main():
     print(f"      balancer idle (Fig. 9, policy={policy}): "
           f"mean={s['mean_idle_s'] * 1e3:.2f}ms "
           f"p99={s['p99_idle_s'] * 1e3:.1f}ms max={s['max_idle_s'] * 1e3:.1f}ms")
+    if s["batch_histogram"]:
+        print(f"      realised batch sizes {{level: {{size: count}}}}: "
+              f"{s['batch_histogram']}")
     lb.shutdown()  # joins the dispatcher + worker pool; no leaked threads
 
     # Fig. 6 analogue: GP over the full probe-0 time series.

@@ -34,9 +34,10 @@ from .policies import (
     register_policy,
 )
 from .telemetry import Telemetry
-from .types import Request, Server, ServerDiedError, ServerStats
+from .types import BatchServer, Request, Server, ServerDiedError, ServerStats
 
 __all__ = [
+    "BatchServer",
     "CostAwarePolicy",
     "FifoPolicy",
     "LeastLoadedPolicy",

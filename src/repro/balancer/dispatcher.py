@@ -56,6 +56,7 @@ class LoadBalancer:
         max_retries: int = 2,
         hedge_quantile: Optional[float] = None,
         batch_window_s: float = 0.0,
+        batch_window_frac: float = 0.25,
         max_batch: int = 256,
         max_workers: Optional[int] = None,
     ) -> None:
@@ -71,6 +72,7 @@ class LoadBalancer:
         self.max_retries = max_retries
         self.hedge_quantile = hedge_quantile
         self.batch_window_s = batch_window_s
+        self.batch_window_frac = batch_window_frac
         self.max_batch = max_batch
         self.max_workers = max_workers
         self._shutdown = False
@@ -322,37 +324,57 @@ class LoadBalancer:
     def _execute(self, req: Request, server: Server) -> None:
         req.dispatched_at = time.monotonic()
         req.server = server.name
+        if req.batchable and server.batch_fn is not None and self.batch_window_s > 0:
+            self._execute_batched(req, server)
+            return
         try:
-            if req.batchable and server.batch_fn is not None and self.batch_window_s > 0:
-                result = self._execute_batched(req, server)
+            if server.batch_fn is not None:
+                # Batch-capable servers evaluate through batch_call even for
+                # a lone request, so the per-member error channel (Exception
+                # results, check_finite) has the same semantics whether or
+                # not the request was coalesced: the member fails alone, the
+                # server survives.  Routing through _single/fn instead would
+                # re-raise the member error here and kill the server below.
+                result = server.batch_call([req.theta])[0]
             else:
                 result = server.fn(req.theta)  # return server(request[j])
         except Exception:  # noqa: BLE001 - any worker fault kills the server
-            self._telemetry.record_failure(server)
-            with self._cv:
-                server.dead = True
-                server.busy = False
-                self._unservable_dirty = True
-                self._cv.notify_all()
-            with self._work_cv:  # a death shrinks the pool like a retire
-                self._work_cv.notify_all()
-            req.retries += 1
-            if req.retries > self.max_retries:
-                req.error = ServerDiedError(
-                    f"request failed after {req.retries} attempts"
-                )
-                req._complete()
-            else:
-                self._requeue(req)
+            self._fail_dispatch(req, server)
             return
         req.completed_at = time.monotonic()
-        req.result = result
+        if isinstance(result, BaseException):
+            req.error = result
+            self._telemetry.record_member_failure(server)
+        else:
+            req.result = result
         self._telemetry.record_completion(req, server)
+        self._free_server(server)
+        req._complete()
+
+    def _free_server(self, server: Server) -> None:
         with self._cv:  # reset busyness once done + notify_all()
             server.busy = False
             server.last_free_at = time.monotonic()
             self._cv.notify_all()
-        req._complete()
+
+    def _fail_dispatch(self, req: Request, server: Server) -> None:
+        """A handler raised: mark the server dead, retry or fail ``req``."""
+        self._telemetry.record_failure(server)
+        with self._cv:
+            server.dead = True
+            server.busy = False
+            self._unservable_dirty = True
+            self._cv.notify_all()
+        with self._work_cv:  # a death shrinks the pool like a retire
+            self._work_cv.notify_all()
+        req.retries += 1
+        if req.retries > self.max_retries:
+            req.error = ServerDiedError(
+                f"request failed after {req.retries} attempts"
+            )
+            req._complete()
+        else:
+            self._requeue(req)
 
     def _requeue(self, req: Request) -> None:
         with self._cv:
@@ -369,28 +391,55 @@ class LoadBalancer:
             req.error = RuntimeError("balancer shut down")
         req._complete()
 
-    # -- micro-task batching (beyond paper) ----------------------------------
-    def _execute_batched(self, req: Request, server: Server):
-        """Coalesce queued batchable same-tag requests into one vmap call.
+    # -- coalesced batch dispatch (beyond paper) -----------------------------
+    def _coalesce_window(self, tag: str) -> float:
+        """Adaptive coalescing window for ``tag``.
 
-        Coalesced requests are completed directly by this worker — unlike
-        the seed there is no per-request waiter thread left behind.
+        Waiting for peers only pays off when it is cheap relative to the
+        work it amortises, so the window is a fraction
+        (``batch_window_frac``) of the tag's EWMA service time, capped by
+        ``batch_window_s``: microsecond GP lookups never sleep a full
+        window, and multi-second fine solves use the whole cap.  Until the
+        EWMA has data the configured cap is used as-is.
+        """
+        ewma = self._telemetry.tag_ewma(tag)
+        if ewma is None:
+            return self.batch_window_s
+        return min(self.batch_window_s, self.batch_window_frac * ewma)
 
-        The coalescing window is only paid when there is actually something
-        to coalesce: a lone batchable request (no queued same-tag batchable
-        peer at dispatch time) executes immediately instead of sleeping
-        ``batch_window_s`` for peers that are not coming.
+    def _execute_batched(self, req: Request, server: Server) -> None:
+        """Coalesce queued batchable same-tag requests into ONE server call.
+
+        ``server.batch_call`` receives every member theta at once — for a
+        :class:`~repro.balancer.types.BatchServer` that is a single stacked
+        ``(B, ...)`` evaluation (one vmapped XLA launch for the whole
+        batch), for a legacy ``batch_fn`` the list contract.  Results are
+        scattered back to member requests; a member whose result is an
+        ``Exception`` fails alone (its batch mates complete normally),
+        while a whole-call exception follows the server-death path with
+        members retrying elsewhere.
+
+        FIFO fairness: members are drained from the arrival queue in
+        arrival order and non-matching requests keep their relative order,
+        so batching never reorders requests within a tag nor starves other
+        tags.  The coalescing window is only paid when a same-tag batchable
+        peer is already queued at dispatch time.
         """
         with self._mutex:
             has_peer = any(
                 r.batchable and r.tag == req.tag for r in self._queue
             )
         if has_peer:
-            time.sleep(self.batch_window_s)
+            window = self._coalesce_window(req.tag)
+            if window > 0:
+                time.sleep(window)
+        limit = self.max_batch
+        if getattr(server, "max_batch", None):
+            limit = min(limit, server.max_batch)
         extra: List[Request] = []
         with self._cv:
             keep: deque[Request] = deque()
-            while self._queue and len(extra) < self.max_batch - 1:
+            while self._queue and len(extra) < limit - 1:
                 r = self._queue.popleft()
                 if r.batchable and r.tag == req.tag:
                     extra.append(r)
@@ -398,17 +447,21 @@ class LoadBalancer:
                     keep.append(r)
             while keep:
                 self._queue.appendleft(keep.pop())
-        thetas = [req.theta] + [r.theta for r in extra]
+        members = [req] + extra
+        # Re-stamp the primary past the coalescing sleep: the window is
+        # queueing, not service — booking it as service time would inflate
+        # the tag EWMA that sizes the adaptive window (a feedback loop,
+        # bounded only by the cap) and the busy-seconds utilization metric.
         now = time.monotonic()
-        for r in extra:
+        for r in members:
             r.dispatched_at = now
             r.server = server.name
         try:
-            results = server.batch_fn(thetas)
-        except Exception:
+            results = server.batch_call([r.theta for r in members])
+        except Exception:  # noqa: BLE001 - whole-call fault kills the server
             # Coalesced members retry elsewhere — each burns one retry, so
             # max_retries bounds them like any other request; the primary
-            # follows the normal failure path in _execute.
+            # follows the normal server-death path.
             exhausted: List[Request] = []
             with self._cv:
                 for r in reversed(extra):
@@ -425,14 +478,27 @@ class LoadBalancer:
                     f"request failed after {r.retries} attempts"
                 )
                 r._complete()
-            raise
+            self._fail_dispatch(req, server)
+            return
         done = time.monotonic()
-        for r, res in zip(extra, list(results)[1:]):
-            r.result = res
+        for r, res in zip(members, results):
             r.completed_at = done
-            r._complete()
+            if isinstance(res, BaseException):
+                r.error = res  # per-member failure: batch mates unaffected
+                self._telemetry.record_member_failure(server)
+            else:
+                r.result = res
+        # One busy interval + one EWMA sample for the fused call (the
+        # primary's — the service time is real even if some members
+        # errored), plus request-count credit for the coalesced members;
+        # errored members were booked above so summary()['failures'] does
+        # not misread poisoned thetas as served work.
+        self._telemetry.record_completion(req, server)
         self._telemetry.record_batched(extra, server)
-        return results[0]
+        self._telemetry.record_batch_size(req.tag, len(members))
+        self._free_server(server)
+        for r in members:
+            r._complete()
 
     # -- straggler hedging (beyond paper) ------------------------------------
     def runtime_quantile(self, tag: str, q: float) -> Optional[float]:

@@ -31,6 +31,7 @@ class Telemetry:
         self._tag_ewma: Dict[str, float] = {}
         self._server_tag_ewma: Dict[tuple, float] = {}
         self._server_busy_s: Dict[str, float] = {}
+        self._batch_hist: Dict[str, Dict[int, int]] = {}
         self._ewma_alpha = ewma_alpha
 
     # -- recording (called by the dispatcher / workers) ----------------------
@@ -55,9 +56,26 @@ class Telemetry:
         with self._lock:
             server.stats.n_requests += len(reqs)
 
+    def record_batch_size(self, tag: str, size: int) -> None:
+        """Book the realised size of one coalesced dispatch (size >= 1).
+
+        Size-1 dispatches are recorded too: the histogram answers 'how
+        often does coalescing actually fire', so the lone-request case is
+        signal, not noise.
+        """
+        with self._lock:
+            hist = self._batch_hist.setdefault(tag, {})
+            hist[size] = hist.get(size, 0) + 1
+
     def record_failure(self, server: Server) -> None:
         with self._lock:
             server.stats.n_failures += 1
+
+    def record_member_failure(self, server: Server) -> None:
+        """Book a per-member batch failure (poisoned theta): the request
+        errored but the server is healthy — counted in ``n_failures`` so
+        ``summary()`` never misreads failed evaluations as served work."""
+        self.record_failure(server)
 
     def _record_runtime_locked(self, tag: str, dt: float, server: Optional[str]) -> None:
         self._runtimes.setdefault(tag, []).append(dt)
@@ -87,6 +105,14 @@ class Telemetry:
     def server_busy_seconds(self, server: str) -> float:
         with self._lock:
             return self._server_busy_s.get(server, 0.0)
+
+    def batch_histogram(self, tag: Optional[str] = None) -> Dict:
+        """Realised coalesced-batch sizes: ``{size: count}`` for ``tag``,
+        or ``{tag: {size: count}}`` for every tag when ``tag`` is None."""
+        with self._lock:
+            if tag is not None:
+                return dict(self._batch_hist.get(tag, {}))
+            return {t: dict(h) for t, h in self._batch_hist.items()}
 
     def runtime_quantile(self, tag: str, q: float) -> Optional[float]:
         with self._lock:
@@ -127,6 +153,7 @@ class Telemetry:
         with self._lock:
             per_server_uptime = {s.name: s.stats.uptime() for s in servers}
             failures = sum(s.stats.n_failures for s in servers)
+            batch_hist = {t: dict(h) for t, h in self._batch_hist.items()}
         return {
             "n_requests": n,
             "mean_idle_s": sum(idles) / n if n else 0.0,
@@ -135,4 +162,5 @@ class Telemetry:
             "max_idle_s": idles_sorted[-1] if n else 0.0,
             "per_server_uptime": per_server_uptime,
             "failures": failures,
+            "batch_histogram": batch_hist,
         }

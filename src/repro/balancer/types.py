@@ -14,6 +14,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 
 @dataclass
 class ServerStats:
@@ -64,6 +66,91 @@ class Server:
 
     def accepts(self, tag: str) -> bool:
         return (not self.capacity_tags) or (tag in self.capacity_tags)
+
+    def batch_call(self, thetas: Sequence[Any]) -> List[Any]:
+        """Evaluate a coalesced batch; the dispatcher's single entry point.
+
+        The legacy ``batch_fn`` contract is a Python-level loop interface:
+        it receives the member thetas as a *list* and returns one result per
+        member.  :class:`BatchServer` overrides this with true stacked
+        dispatch.  Elements of the returned list that are ``Exception``
+        instances are scattered back as per-member failures (the member's
+        request errors; its batch mates are unaffected).
+        """
+        if self.batch_fn is None:
+            raise RuntimeError(f"server '{self.name}' has no batch handler")
+        results = list(self.batch_fn(list(thetas)))
+        if len(results) != len(thetas):
+            raise RuntimeError(
+                f"batch handler of '{self.name}' returned {len(results)} "
+                f"results for {len(thetas)} requests"
+            )
+        return results
+
+
+class BatchServer(Server):
+    """A server whose handler evaluates a whole stacked batch in one call.
+
+    ``batch_fn`` takes one stacked ``(B, ...)`` parameter array and returns
+    per-request results — either a ``(B, ...)`` array (row ``i`` answers
+    member ``i``) or a length-``B`` sequence.  The dispatcher's coalescing
+    path hands a whole same-tag batch to this server as a *single* call, so
+    a ``vmap``ped (or AOT-compiled) executable runs one fused XLA launch
+    instead of B sequential ones; a lone request goes through the same
+    callable with B = 1, keeping batched and per-request results
+    bit-identical by construction.
+
+    ``max_batch`` caps the coalesced batch size for this server (e.g. the
+    largest executable in an AOT cache); the balancer-wide ``max_batch``
+    still applies on top.  ``check_finite=True`` converts members whose
+    result contains ANY non-finite value into per-member
+    ``FloatingPointError`` failures — one poisoned theta then fails only
+    its own request, never its batch mates (vmapped math cannot raise
+    per-lane, so this is the scatter-side error channel).  Leave it off
+    for models whose observables may legitimately saturate to inf.
+    """
+
+    def __init__(
+        self,
+        batch_fn: Callable,
+        *,
+        name: Optional[str] = None,
+        capacity_tags: Sequence[str] = (),
+        max_batch: Optional[int] = None,
+        check_finite: bool = False,
+    ) -> None:
+        super().__init__(
+            self._single, name=name, capacity_tags=capacity_tags,
+            batch_fn=batch_fn,
+        )
+        self.max_batch = max_batch
+        self.check_finite = check_finite
+
+    def _single(self, theta) -> Any:
+        result = self.batch_call([theta])[0]
+        if isinstance(result, BaseException):
+            raise result
+        return result
+
+    def batch_call(self, thetas: Sequence[Any]) -> List[Any]:
+        stacked = np.stack([np.asarray(t) for t in thetas])
+        out = self.batch_fn(stacked)
+        results = [np.asarray(r) for r in out]
+        if len(results) != len(thetas):
+            raise RuntimeError(
+                f"batch handler of '{self.name}' returned {len(results)} "
+                f"results for {len(thetas)} requests"
+            )
+        if self.check_finite:
+            results = [
+                r
+                if np.all(np.isfinite(r))
+                else FloatingPointError(
+                    f"non-finite result for batch member {i} on '{self.name}'"
+                )
+                for i, r in enumerate(results)
+            ]
+        return results
 
 
 @dataclass(eq=False)  # identity equality: dataclass field == would compare

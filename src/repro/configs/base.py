@@ -1,8 +1,7 @@
 """Architecture + shape configuration for the assigned model zoo."""
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Dict, Optional, Tuple
 
 

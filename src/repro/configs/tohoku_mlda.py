@@ -41,6 +41,26 @@ class MLDAWorkloadConfig:
     # chains either way; see DESIGN.md §8).
     ensemble_seed: int = 0
     speculative_prefetch: bool = False
+    # batched forward-solve engine (DESIGN.md §2/§7): same-level solves from
+    # the ensemble's chains coalesce into ONE stacked vmapped AOT launch per
+    # server call.  batch_window_s caps the adaptive coalescing window (the
+    # dispatcher shrinks it to a fraction of the level's EWMA service time);
+    # max_batch caps the realised batch size (executables are cached per
+    # power-of-two size up to this).
+    batch_solves: bool = True
+    max_batch: int = 8
+    batch_window_s: float = 0.01
+
+    @property
+    def batchable_levels(self) -> Tuple[int, ...]:
+        """Levels whose requests may coalesce (all of them when batching)."""
+        return (0, 1, 2) if self.batch_solves else (0,)
+
+    def batch_kwargs(self) -> Dict[str, object]:
+        """Balancer construction kwargs implementing this config's batching."""
+        if not self.batch_solves:
+            return {}
+        return {"batch_window_s": self.batch_window_s, "max_batch": self.max_batch}
 
 
 PAPER = MLDAWorkloadConfig(

@@ -18,6 +18,7 @@ Existing imports keep working:
 from __future__ import annotations
 
 from repro.balancer import (  # noqa: F401 - re-exports
+    BatchServer,
     CostAwarePolicy,
     FifoPolicy,
     LeastLoadedPolicy,
@@ -41,6 +42,7 @@ from repro.balancer import (  # noqa: F401 - re-exports
 )
 
 __all__ = [
+    "BatchServer",
     "CostAwarePolicy",
     "FifoPolicy",
     "LeastLoadedPolicy",

@@ -12,7 +12,6 @@ from typing import Any, Dict, Optional
 import numpy as np
 
 from .balancer import LoadBalancer
-from .mh import Proposal
 from .mlda import MLDASampler
 
 

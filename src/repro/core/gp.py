@@ -19,11 +19,10 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 from functools import partial
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 SQRT5 = math.sqrt(5.0)
 
@@ -94,7 +93,15 @@ class GaussianProcess:
         """Posterior mean (and variance) at x: (m, d) -> (m, p)."""
         kfn = _kernel_fn(self.use_pallas)
         ks = kfn(jnp.atleast_2d(x), self.x_train, self.params)  # (m, n)
-        mean = ks @ self.alpha * self.y_scale + self.y_mean
+        # Elementwise multiply + fixed-order reduce instead of `ks @ alpha`:
+        # a GEMM picks different blocking per row count m, which costs an
+        # ulp between m = 1 and m = 8 — fatal for the coalesced-dispatch
+        # guarantee that batched results equal per-request results bit for
+        # bit.  The reduction order over n here is independent of m.
+        mean = (
+            jnp.sum(ks[:, :, None] * self.alpha[None, :, :], axis=1)
+            * self.y_scale + self.y_mean
+        )
         if not return_var:
             return mean
         v = jax.scipy.linalg.solve_triangular(self.chol, ks.T, lower=True)
@@ -105,6 +112,19 @@ class GaussianProcess:
     def __call__(self, theta: jax.Array) -> jax.Array:
         """UM-Bridge model interface: single-point evaluation."""
         return self.predict(jnp.atleast_2d(theta))[0]
+
+    def batch_call(self, thetas: jax.Array) -> jax.Array:
+        """Batched posterior mean for a stacked ``(B, d)`` parameter array.
+
+        One ``(B, n)`` kernel assembly + one fixed-order contraction
+        (see :meth:`predict` — deliberately NOT a GEMM) answers the whole
+        coalesced batch — the :class:`repro.balancer.types.BatchServer`
+        handler for level 0.  Row ``i`` runs the same arithmetic as
+        ``__call__(thetas[i])`` regardless of ``B``, so members are
+        bit-identical (fp32) to per-request evaluation — verified in
+        ``tests/test_batch_dispatch.py``.
+        """
+        return self.predict(jnp.atleast_2d(thetas))
 
 
 def fit_gp(

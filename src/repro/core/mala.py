@@ -15,7 +15,6 @@ different pools.  Gradients come from ``jax.grad`` of the forward model
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Callable, Optional, Tuple
 
 import numpy as np

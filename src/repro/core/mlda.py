@@ -34,7 +34,7 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tupl
 
 import numpy as np
 
-from .balancer import LoadBalancer, Server
+from .balancer import LoadBalancer, Server  # Server: quoted annotations
 from .mh import Proposal, mh_step_steps
 
 
@@ -477,22 +477,30 @@ class MLDASampler:
 
     # -- checkpointable state (paper §7 future work) ---------------------------
     def stats_table(self) -> List[Dict[str, Any]]:
-        """Rows shaped like the paper's Table 1."""
+        """Rows shaped like the paper's Table 1.
+
+        When the sampler runs through a balancer, each row also reports
+        the realised coalesced-batch sizes for its level's tag
+        (``batch_hist``: ``{size: count}``) — how often batched dispatch
+        actually fused same-level solves (DESIGN.md §2).
+        """
         rows = []
         for lvl, rec in enumerate(self.levels):
             xs = np.asarray(rec.samples) if rec.samples else np.zeros((0, 1))
-            rows.append(
-                {
-                    "level": lvl,
-                    "n_evals": rec.n_evals,
-                    "n_samples": len(rec.samples),
-                    "acceptance_rate": rec.acceptance_rate,
-                    "mean_eval_s": rec.eval_seconds / max(rec.n_evals, 1),
-                    "n_spec_discarded": rec.n_spec_discarded,
-                    "E_phi": xs.mean(axis=0).tolist() if len(xs) else None,
-                    "V_phi": xs.var(axis=0).tolist() if len(xs) else None,
-                }
-            )
+            row = {
+                "level": lvl,
+                "n_evals": rec.n_evals,
+                "n_samples": len(rec.samples),
+                "acceptance_rate": rec.acceptance_rate,
+                "mean_eval_s": rec.eval_seconds / max(rec.n_evals, 1),
+                "n_spec_discarded": rec.n_spec_discarded,
+                "E_phi": xs.mean(axis=0).tolist() if len(xs) else None,
+                "V_phi": xs.var(axis=0).tolist() if len(xs) else None,
+            }
+            tag = getattr(self.log_posteriors[lvl], "tag", None)
+            if self.balancer is not None and tag is not None:
+                row["batch_hist"] = self.balancer.telemetry.batch_histogram(tag)
+            rows.append(row)
         return rows
 
     def speculation_summary(self) -> Dict[str, Any]:

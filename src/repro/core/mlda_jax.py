@@ -20,7 +20,6 @@ against closed-form posteriors).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, NamedTuple, Sequence
 
 import jax

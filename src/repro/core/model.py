@@ -11,8 +11,8 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Optional, Protocol, runtime_checkable
+from dataclasses import dataclass
+from typing import Any, Callable, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ d a multiple of 8 (fp32 sublane width).
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

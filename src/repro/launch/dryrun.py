@@ -23,7 +23,7 @@ import json
 import re
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 
@@ -36,7 +36,7 @@ from repro.launch.mesh import (
     make_production_mesh,
 )
 from repro.runtime.sharding import choose_policy, make_policy
-from repro.runtime.train_loop import get_runtime, shard_train_step
+from repro.runtime.train_loop import shard_train_step
 from repro.runtime.serve_loop import shard_decode_step, shard_prefill_step
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
@@ -86,7 +86,6 @@ def collective_census(hlo_text: str) -> Dict[str, float]:
 def model_flops(arch_id: str, shape_name: str) -> float:
     """6 * N_active * tokens (training) / 2 * N_active * tokens (inference)."""
     from repro.models import abstract_params
-    from repro.models.lm import param_count
 
     cfg = ARCHS[arch_id]
     shape = SHAPES[shape_name]

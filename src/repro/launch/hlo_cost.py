@@ -25,7 +25,6 @@ Validated against fully-unrolled lowerings in tests/test_hlo_cost.py.
 """
 from __future__ import annotations
 
-import math
 import re
 from collections import defaultdict
 from dataclasses import dataclass, field

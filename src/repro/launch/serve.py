@@ -17,7 +17,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS
-from repro.configs.base import ShapeConfig
 from repro.core.balancer import LoadBalancer, Server
 from repro.models import build_model
 

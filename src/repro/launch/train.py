@@ -7,15 +7,13 @@ system, data pipeline, AdamW, checkpoint/restart, failure handling.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint.checkpoint import AsyncCheckpointer, restore, save
-from repro.configs import ARCHS, SHAPES
+from repro.configs import ARCHS
 from repro.configs.base import ShapeConfig
 from repro.data.pipeline import microbatch, synthetic_lm_batch
 from repro.launch.mesh import make_host_mesh

@@ -1,7 +1,7 @@
 """GQA attention with RoPE, optional bias/sliding-window; train + decode."""
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ the encoder output -> MLP.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +27,6 @@ from .attention import (
 from .layers import (
     Params,
     cross_entropy_loss,
-    dense_init,
     dtype_of,
     embed_init,
     init_mlp,

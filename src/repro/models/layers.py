@@ -1,8 +1,7 @@
 """Shared transformer primitives (pure-functional JAX, explicit pytrees)."""
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

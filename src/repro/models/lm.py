@@ -11,8 +11,7 @@ scan over in-group Mamba layers, shared params in the carry closure.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

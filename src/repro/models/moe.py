@@ -12,7 +12,6 @@ n_experts/top_k larger; the hillclimb switches it to sparse dispatch.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,12 +17,12 @@ makes the ``long_500k`` cell tractable for SSM/hybrid archs (DESIGN.md §4).
 from __future__ import annotations
 
 import math
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, SSMConfig
+from repro.configs.base import ArchConfig
 
 from .layers import Params, dense_init, rmsnorm
 

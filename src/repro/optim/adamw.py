@@ -8,9 +8,8 @@ Production knobs:
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

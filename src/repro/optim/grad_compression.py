@@ -19,12 +19,11 @@ error-feedback contraction property).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 try:  # jax >= 0.6 exports shard_map at top level
     from jax import shard_map as _shard_map

@@ -1,10 +1,8 @@
 """Serve-step factories: prefill (full sequence) and decode (KV-cache step)."""
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import abstract_decode_state, build_model, input_specs

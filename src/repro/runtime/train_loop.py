@@ -3,8 +3,7 @@ accumulation, remat (in the model), FSDP+TP shardings, and donation."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

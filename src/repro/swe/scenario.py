@@ -14,9 +14,7 @@ and arrival time at two DART-like probes, under a uniform prior on the
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -132,6 +130,73 @@ class TohokuScenario:
         forward.dt = dt
         return forward
 
+    def build_batch_forward(self) -> Callable:
+        """thetas (B, 2) -> observables (B, 4) in ONE fused batched solve.
+
+        The :class:`repro.balancer.types.BatchServer` handler for this
+        level: the *whole* per-theta forward (displacement -> fused solve
+        -> observation operator) is ``vmap``ped and AOT-compiled once per
+        ``(grid shape, B)`` after power-of-two batch padding
+        (:class:`repro.swe.solver.AOTBatchCache`).  Row ``i`` is
+        bit-identical (fp32) to ``build_forward()(thetas[i])``: the batch
+        axis only prepends a leading dimension to the same compiled
+        arithmetic — verified in ``tests/test_batch_dispatch.py``.
+
+        With ``use_pallas`` the solve instead routes through
+        ``make_solver(batch=True)`` so the whole batch advances via the
+        fused batched Pallas kernel (one launch per step, donated state
+        buffers); kernel-vs-oracle accuracy is tolerance-level there, so
+        the bit-identity guarantee applies to the default (pure-XLA) path.
+        """
+        from .solver import AOTBatchCache
+
+        if self.use_pallas:
+            solver = make_solver(
+                self.cfg, self.bathymetry(), self.probe_indices(),
+                use_pallas=True, batch=True,
+            )
+            n_steps, dt = solver.n_steps, solver.dt
+            thr = self.arrival_threshold
+            t_norm = n_steps * dt
+
+            def forward(thetas: jax.Array) -> jax.Array:
+                thetas = jnp.atleast_2d(thetas)
+                eta0 = jax.vmap(self.displacement)(thetas)
+                series, _ = solver(eta0)  # (B, n_steps, n_probes)
+                hmax = jnp.max(series, axis=1)
+                k = 40.0 / thr
+                crossed = jax.nn.sigmoid(k * (series - thr))
+                not_yet = jnp.cumprod(1.0 - crossed, axis=1)
+                t_arr = jnp.sum(not_yet, axis=1) * dt / t_norm
+                return jnp.stack(
+                    [hmax[:, 0], t_arr[:, 0], hmax[:, 1], t_arr[:, 1]],
+                    axis=-1,
+                )
+
+            forward.n_steps = n_steps
+            forward.dt = dt
+            forward.executables = solver.executables
+            return forward
+
+        single = self.build_forward()
+        # No donate: a (B, 2) theta buffer cannot alias any output (the
+        # solver-level factory donates the (B, ny, nx) state buffers,
+        # where aliasing is real).  Padding repeats member 0 — any valid
+        # theta works; zeros would too, but stay inside the prior box.
+        cache = AOTBatchCache(
+            jax.vmap(single), key=(self.ny, self.nx),
+            dtype=jnp.result_type(float), pad="repeat",
+        )
+
+        def forward(thetas: jax.Array) -> jax.Array:
+            out, n = cache(jnp.atleast_2d(thetas))
+            return out[:n]
+
+        forward.n_steps = single.n_steps
+        forward.dt = single.dt
+        forward.executables = cache.executables
+        return forward
+
     def build_series_forward(self) -> Callable:
         """theta -> full probe-0 SSHA time series (for the Fig. 6 GP)."""
         solver = make_solver(
@@ -221,7 +286,15 @@ def make_hierarchy(
     f_fine = jax.jit(fine.build_forward())
     f_coarse = jax.jit(coarse.build_forward())
     problem.generate_observations(f_fine)
-    return {"problem": problem, "forward_fine": f_fine, "forward_coarse": f_coarse}
+    return {
+        "problem": problem,
+        "forward_fine": f_fine,
+        "forward_coarse": f_coarse,
+        # Stacked (B, 2) -> (B, 4) handlers for BatchServer pools (the AOT
+        # executables compile lazily, per realised batch size).
+        "forward_fine_batch": fine.build_batch_forward(),
+        "forward_coarse_batch": coarse.build_batch_forward(),
+    }
 
 
 def train_level0_gp(

@@ -3,37 +3,74 @@
 Shared by ``examples/tsunami_inversion.py`` and
 ``benchmarks/bench_mlda.py`` so the example and the benchmark always
 measure the same pool layout (``MLDAWorkloadConfig.servers_per_level``).
+
+With ``MLDAWorkloadConfig.batch_solves`` (the default) every server is a
+:class:`repro.balancer.types.BatchServer`: its handler takes a stacked
+``(B, ...)`` parameter array, so the dispatcher's coalescing path runs a
+whole same-level batch as ONE vmapped AOT executable launch instead of B
+back-to-back solves.  Pass the scenario-built batch forwards via
+``batch_forwards=(gp_batch, coarse_batch, fine_batch)`` or let this module
+derive them (``gp.batch_call`` exists on the GP; SWE levels need the
+``TohokuScenario.build_batch_forward`` callables).
 """
 from __future__ import annotations
 
-from typing import Callable, List
+from typing import Callable, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.balancer import Server
+from repro.balancer import BatchServer, Server
 
 
-def make_level_servers(w, gp: Callable, f_coarse: Callable, f_fine: Callable) -> List[Server]:
+def make_level_servers(
+    w,
+    gp: Callable,
+    f_coarse: Callable,
+    f_fine: Callable,
+    *,
+    batch_forwards: Optional[Sequence[Optional[Callable]]] = None,
+) -> List[Server]:
     """One GP server + the config's per-level coarse/fine SWE servers.
 
     ``np.asarray`` forces each (async-dispatched) jax solve to materialise
     ON the worker thread: the server's busy interval covers the real
     compute and the GIL is released while XLA runs, so solves from
     different chains genuinely overlap.
+
+    When ``w.batch_solves`` is set, a level whose batched forward is
+    available becomes a :class:`BatchServer` (stacked ``(B, ...)`` in, one
+    result row per member out) capped at ``w.max_batch``; levels without
+    one fall back to per-request servers.  ``batch_forwards`` is
+    ``(level0, level1, level2)`` stacked handlers — ``None`` entries fall
+    back too.  The GP's own :meth:`~repro.core.gp.GaussianProcess.batch_call`
+    is used automatically when no explicit level-0 handler is given.
     """
-    servers = [
-        Server(lambda t: np.asarray(gp(jnp.asarray(t))), name="gp-0",
-               capacity_tags=("level0",))
-    ]
+    batching = bool(getattr(w, "batch_solves", False))
+    max_batch = int(getattr(w, "max_batch", 8)) or None
+    bf = list(batch_forwards or (None, None, None))
+    while len(bf) < 3:
+        bf.append(None)
+    if batching and bf[0] is None and hasattr(gp, "batch_call"):
+        bf[0] = gp.batch_call
+
+    def batched(fn: Callable) -> Callable:
+        return lambda ts: np.asarray(fn(jnp.asarray(ts)))
+
+    def server(level: int, single: Callable, name: str, tag: str) -> Server:
+        if batching and bf[level] is not None:
+            return BatchServer(
+                batched(bf[level]), name=name, capacity_tags=(tag,),
+                max_batch=max_batch,
+            )
+        return Server(
+            lambda t: np.asarray(single(jnp.asarray(t))),
+            name=name, capacity_tags=(tag,),
+        )
+
+    servers = [server(0, gp, "gp-0", "level0")]
     for i in range(max(w.servers_per_level.get(1, 1), 1)):
-        servers.append(
-            Server(lambda t: np.asarray(f_coarse(jnp.asarray(t))),
-                   name=f"coarse-{i}", capacity_tags=("level1",))
-        )
+        servers.append(server(1, f_coarse, f"coarse-{i}", "level1"))
     for i in range(max(w.servers_per_level.get(2, 1), 1)):
-        servers.append(
-            Server(lambda t: np.asarray(f_fine(jnp.asarray(t))),
-                   name=f"fine-{i}", capacity_tags=("level2",))
-        )
+        servers.append(server(2, f_fine, f"fine-{i}", "level2"))
     return servers

@@ -159,23 +159,114 @@ def stable_dt(cfg: SWEConfig, h_max: float, u_margin: float = 15.0) -> float:
     return cfg.cfl * min(cfg.dx, cfg.dy) / c
 
 
+def pow2_batch(n: int) -> int:
+    """Next power of two >= n — the AOT executable-cache bucketing."""
+    if n < 1:
+        raise ValueError("batch size must be >= 1")
+    return 1 << (n - 1).bit_length()
+
+
+class AOTBatchCache:
+    """Power-of-two padded, per-``(*key, B)`` AOT executable cache.
+
+    The one home of the batched-dispatch compile bookkeeping (DESIGN.md
+    §7.2), shared by the solver-level and scenario-level batch factories:
+    lowers ``stacked_fn`` once per padded batch size, reuses the
+    executable for every later batch that buckets to the same size, and
+    (with ``donate=True``) donates the stacked input buffer — staging a
+    private copy first when the caller handed us a live jax array, since
+    donation deletes the buffer.
+
+    ``pad``: ``"zeros"`` fills padding members with zeros, ``"repeat"``
+    replicates member 0 (use when zeros are not a valid input).  Calling
+    returns ``(result_pytree, n)`` with the *padded* leading axis; the
+    caller slices back to ``n``.
+    """
+
+    def __init__(
+        self,
+        stacked_fn: Callable,
+        *,
+        key: Tuple,
+        dtype,
+        donate: bool = False,
+        pad: str = "zeros",
+    ) -> None:
+        if pad not in ("zeros", "repeat"):
+            raise ValueError(f"unknown pad mode '{pad}'")
+        self.stacked_fn = stacked_fn
+        self.key = tuple(key)
+        self.dtype = dtype
+        self.donate = donate
+        self.pad = pad
+        self.executables: dict = {}
+
+    def __call__(self, stacked: jax.Array):
+        arg = stacked
+        stacked = jnp.asarray(stacked, self.dtype)
+        if self.donate and stacked is arg:
+            stacked = jnp.array(stacked, copy=True)
+        n = stacked.shape[0]
+        n_pad = pow2_batch(n)
+        key = (*self.key, n_pad)
+        exe = self.executables.get(key)
+        if exe is None:
+            spec = jax.ShapeDtypeStruct((n_pad, *stacked.shape[1:]), self.dtype)
+            jitted = jax.jit(
+                self.stacked_fn, donate_argnums=(0,) if self.donate else ()
+            )
+            exe = jitted.lower(spec).compile()
+            self.executables[key] = exe
+        if n_pad != n:
+            shape = (n_pad - n, *stacked.shape[1:])
+            fill = (
+                jnp.zeros(shape, self.dtype)
+                if self.pad == "zeros"
+                else jnp.broadcast_to(stacked[:1], shape)
+            )
+            stacked = jnp.concatenate([stacked, fill])
+        return exe(stacked), n
+
+
 def make_solver(
     cfg: SWEConfig,
     b: jax.Array,
     probe_ij: Sequence[Tuple[int, int]],
     *,
     use_pallas: bool = False,
+    batch: bool = False,
 ) -> Callable:
     """Build ``solve(eta0) -> (eta_series, final_state)``.
 
     ``eta0`` is the initial sea-surface displacement (SSHA) added to the
     lake-at-rest depth; ``eta_series`` is (n_steps, n_probes) SSHA at the
     probes — everything the observation operator needs.
+
+    With ``batch=True`` the returned callable instead takes a stacked
+    ``(B, ny, nx)`` displacement array and returns
+    ``((B, n_steps, n_probes) series, batched final state)``: the whole
+    batch advances in ONE fused time loop (a batched Pallas sweep when
+    ``use_pallas``, a ``vmap`` of :func:`step` otherwise), AOT-compiled
+    per batch size with the input buffer donated and cached under
+    ``(grid shape, B)`` after power-of-two padding — see
+    ``solve.executables``.  Per-member results are bit-identical (fp32) to
+    the unbatched solver: the batch dimension only adds a leading axis to
+    the same elementwise arithmetic.
     """
     b = jnp.asarray(b)
     h_rest = jnp.maximum(-b, 0.0)
     h_max = float(jnp.max(h_rest))
-    dt = cfg.dt_override or stable_dt(cfg, h_max)
+    if cfg.dt_override is not None:
+        # NOT `dt_override or stable_dt(...)`: 0.0 is falsy, and silently
+        # replacing an (invalid) explicit override with the CFL dt masks
+        # the configuration error — reject it instead.
+        if cfg.dt_override <= 0.0:
+            raise ValueError(
+                f"dt_override must be positive, got {cfg.dt_override}"
+            )
+        dt = cfg.dt_override
+    else:
+        dt = stable_dt(cfg, h_max)
     n_steps = int(math.ceil(cfg.t_end / dt))
     pi = jnp.asarray([ij[0] for ij in probe_ij])
     pj = jnp.asarray([ij[1] for ij in probe_ij])
@@ -206,7 +297,74 @@ def make_solver(
 
     solve.n_steps = n_steps
     solve.dt = dt
-    return solve
+    if not batch:
+        return solve
+    return _make_batched_solver(cfg, b, pi, pj, solve, n_steps, dt, use_pallas)
+
+
+def _make_batched_solver(
+    cfg: SWEConfig,
+    b: jax.Array,
+    pi: jax.Array,
+    pj: jax.Array,
+    solve: Callable,
+    n_steps: int,
+    dt: float,
+    use_pallas: bool,
+) -> Callable:
+    """Stacked-batch wrapper: AOT ``vmap`` executables behind a size cache.
+
+    The time loop is still one ``lax.scan``; the batch is a leading axis
+    carried through every step, so the whole batch is ONE XLA program per
+    step (and, with ``use_pallas``, one Pallas launch per fused sweep —
+    the kernel's batch grid axis).  Executables are ``lower().compile()``d
+    once per ``(grid shape, padded B)`` with the stacked input donated,
+    then reused for every later batch that pads to the same size.
+    """
+    if use_pallas:
+        from repro.kernels.swe_flux import ops as swe_ops
+
+        def step_batch(state: SWEState) -> SWEState:
+            return swe_ops.swe_step_batched(state, b, dt, cfg=cfg)
+    else:
+        step_one = lambda s: step(s, b, cfg, dt)
+        step_batch = jax.vmap(step_one)
+
+    h_rest = jnp.maximum(-b, 0.0)
+    dtype = h_rest.dtype
+
+    def solve_stacked(eta0_b: jax.Array):
+        h0 = jnp.maximum(h_rest[None] + eta0_b, 0.0)
+        h0 = jnp.where(h_rest[None] > H_EPS, h0, h_rest[None])
+        state = SWEState(h0, jnp.zeros_like(h0), jnp.zeros_like(h0))
+
+        def body(state, _):
+            new = step_batch(state)
+            eta = new.h + b[None]
+            return new, eta[:, pi, pj]
+
+        final, series = jax.lax.scan(body, state, None, length=n_steps)
+        return jnp.moveaxis(series, 0, 1), final  # (B, n_steps, n_probes)
+
+    # Zero-displacement padding members are lake-at-rest solves.
+    cache = AOTBatchCache(
+        solve_stacked, key=(cfg.ny, cfg.nx), dtype=dtype, donate=True,
+        pad="zeros",
+    )
+
+    def solve_batch(eta0_b: jax.Array):
+        if jnp.ndim(eta0_b) != 3:
+            raise ValueError(
+                f"batched solver wants (B, ny, nx), got {jnp.shape(eta0_b)}"
+            )
+        (series, final), n = cache(eta0_b)
+        return series[:n], SWEState(final.h[:n], final.hu[:n], final.hv[:n])
+
+    solve_batch.n_steps = n_steps
+    solve_batch.dt = dt
+    solve_batch.executables = cache.executables
+    solve_batch.solve_one = solve
+    return solve_batch
 
 
 def lake_at_rest_error(cfg: SWEConfig, b: jax.Array, n_steps: int = 50) -> float:

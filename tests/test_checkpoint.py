@@ -2,9 +2,7 @@
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import AsyncCheckpointer, restore, save
 from repro.configs import ARCHS

@@ -6,7 +6,6 @@ reduction, balancer idle times under the MLDA dependency structure.
 """
 import threading
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

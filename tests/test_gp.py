@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import fit_gp, latin_hypercube, scale_to_bounds
 from repro.core.gp import GPParams, matern52

@@ -1,6 +1,5 @@
 """MALA (paper §7 future work: gradient-based MCMC on the balancer)."""
 import numpy as np
-import pytest
 
 from repro.core.balancer import LoadBalancer, Server
 from repro.core.mala import BalancedGradDensity, mala

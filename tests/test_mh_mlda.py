@@ -1,6 +1,5 @@
 """MCMC correctness: MH, DA (Algorithm 2), MLDA recursion (paper §5)."""
 import numpy as np
-import pytest
 
 from repro.core import (
     AdaptiveMetropolis,

@@ -8,7 +8,7 @@ import pytest
 from repro.configs import ARCHS
 from repro.configs.base import ShapeConfig
 from repro.data.pipeline import batch_for
-from repro.models import build_model, input_specs
+from repro.models import build_model
 from repro.models.lm import param_count
 
 SHAPE = ShapeConfig("smoke", seq_len=64, global_batch=2, kind="train")

@@ -1,5 +1,4 @@
 """MoE dispatch + Mamba2 SSD unit tests."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,4 @@
 """Property-based tests (hypothesis) on system invariants."""
-import threading
 import time
 
 import pytest

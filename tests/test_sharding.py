@@ -1,7 +1,4 @@
 """Sharding policy unit tests (no multi-device needed — pure spec logic)."""
-import jax
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, SHAPES

@@ -84,6 +84,29 @@ def test_forward_gradient_exists():
     assert float(jnp.abs(g).max()) > 0.0
 
 
+def test_dt_override_honored_not_falsy_dropped():
+    """Regression: ``cfg.dt_override or stable_dt(...)`` silently ignored a
+    0.0 override (falsy); the check is now ``is not None`` with explicit
+    validation, so a positive override is honored exactly and a
+    non-positive one is rejected instead of masked."""
+    sc = TohokuScenario(nx=24, ny=24, t_end=600.0)
+    base = sc.cfg
+    b = sc.bathymetry()
+    probes = sc.probe_indices()
+
+    cfg = SWEConfig(nx=base.nx, ny=base.ny, dx=base.dx, dy=base.dy,
+                    t_end=base.t_end, dt_override=0.5)
+    solver = make_solver(cfg, b, probes)
+    assert solver.dt == 0.5
+    assert solver.n_steps == int(np.ceil(cfg.t_end / 0.5))
+
+    for bad in (0.0, -1.0):
+        bad_cfg = SWEConfig(nx=base.nx, ny=base.ny, dx=base.dx, dy=base.dy,
+                            t_end=base.t_end, dt_override=bad)
+        with pytest.raises(ValueError, match="dt_override"):
+            make_solver(bad_cfg, b, probes)
+
+
 def test_coarse_fine_observables_correlate():
     """Levels must approximate each other (MLDA's premise)."""
     coarse = TohokuScenario(nx=24, ny=24, t_end=2 * 3600.0)
