@@ -1,0 +1,221 @@
+"""Dispatcher hot-path microbenchmark (scheduling overhead, no real work).
+
+The paper's headline figure is a mean node idle time "close to a
+millisecond"; once forward solves are batched and chains are ensembled the
+binding constraint is the dispatcher's *own* decision cost.  This bench
+isolates it: every server is a no-op (`lambda x: x`), so requests/s is the
+reciprocal of pure scheduling overhead — queue push, dispatch decision,
+worker hand-off, completion signalling, telemetry booking.
+
+Two figures, written to ``BENCH_dispatch.json``:
+
+* **throughput** — the paper's heterogeneous regime, distilled: a
+  ``QUEUE_DEPTH``-deep backlog of ``tag0`` requests is parked at the head
+  of the queue (their one server is busy on a solve that outlives the
+  measurement), while 1 / 4 / 16 client threads enqueue no-op traffic for
+  tags 1-3 in ``SUBMIT_CHUNK``-sized ``submit_many`` calls (the ensemble
+  driver's batch-admission pattern).  Head-of-line-blocking avoidance
+  says the flowing tags must pass the parked backlog — and what that
+  pass *costs* is exactly what changed: the pre-PR engine re-scanned the
+  entire backlog (O(queue x servers)) for every decision, the indexed
+  engine consults per-tag sub-queues and a free-server index (O(queued
+  tags)).  Requests/s counts the flowing traffic only.  The engine runs
+  ``MAX_WORKERS = 3`` worker threads — one pinned by the parked solve,
+  two saturating zero-cost service; a larger pool only adds CPython
+  GIL/lock contention that masks the scheduler cost this bench isolates
+  (both engines are measured with the same settings).
+* **per-request overhead** — one client, one server, strictly sequential
+  blocking submits: microseconds of scheduling per request at depth ~1.
+
+``--smoke`` runs a reduced size and gates CI: throughput at 16 clients
+must clear ``--min-rps`` and the engine must leak zero threads.
+
+``PRE_PR`` records the same workload measured at commit 3861960 (the
+engine before the indexed-queue dispatcher) on the reference dev machine,
+so the JSON carries the speedup this PR is accepted against; rerun
+``--baseline`` on a checkout of that commit to refresh it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import threading
+import time
+from typing import Dict, List
+
+from repro.balancer import LoadBalancer, Server
+
+JSON_PATH = os.environ.get(
+    "BENCH_DISPATCH_JSON",
+    os.path.join(os.path.dirname(__file__), "BENCH_dispatch.json"),
+)
+
+N_TAGS = 4  # tag0 is the parked backlog; tags 1-3 are the flowing traffic
+SERVERS_PER_TAG = 2  # per flowing tag; tag0 has the single parked server
+QUEUE_DEPTH = 1024  # parked backlog depth (acceptance floor: >= 256)
+SUBMIT_CHUNK = 64  # requests per submit_many call on the client threads
+MAX_WORKERS = 3  # one parked on the long solve + two for no-op service
+
+# Same workload measured on the pre-PR engine (flat arrival deque,
+# O(queue x servers) policy scan, notify_all wakeups, unbounded telemetry)
+# at commit 3861960, on the reference dev machine (see --baseline).
+PRE_PR = {
+    "throughput_rps": {"1": 1009.0, "4": 994.0, "16": 1063.0},
+    "overhead_us_per_req": 266.5,
+}
+
+
+def make_pool(park_gate: threading.Event) -> List[Server]:
+    def parked(x):  # the multi-second fine solve of the paper's hierarchy
+        park_gate.wait(120)
+        return x
+
+    pool = [Server(parked, name="s0-0", capacity_tags=("tag0",))]
+    pool.extend(
+        Server(lambda x: x, name=f"s{t}-{i}", capacity_tags=(f"tag{t}",))
+        for t in range(1, N_TAGS)
+        for i in range(SERVERS_PER_TAG)
+    )
+    return pool
+
+
+def run_throughput(n_clients: int, n_requests: int) -> float:
+    """Flowing requests/s past a deep parked head-of-line backlog."""
+    park_gate = threading.Event()
+    lb = LoadBalancer(make_pool(park_gate), max_workers=MAX_WORKERS)
+    per_client = n_requests // n_clients
+    tags = [f"tag{t}" for t in range(1, N_TAGS)]
+
+    # Park the backlog: one tag0 request occupies its server for the whole
+    # measurement; QUEUE_DEPTH more sit at the head of the arrival queue.
+    backlog = [lb.submit_async(i, tag="tag0") for i in range(QUEUE_DEPTH + 1)]
+    deadline = time.monotonic() + 10
+    while not any(s.busy for s in lb.servers):  # parked solve dispatched
+        if time.monotonic() > deadline:
+            raise RuntimeError("tag0 solve never dispatched")
+        time.sleep(0.001)
+
+    all_reqs: List[List] = [[] for _ in range(n_clients)]
+
+    def client(c: int) -> None:
+        reqs = all_reqs[c]
+        for k in range(per_client // SUBMIT_CHUNK):
+            reqs.extend(
+                lb.submit_many(
+                    range(SUBMIT_CHUNK), tag=tags[(c + k) % len(tags)]
+                )
+            )
+
+    threads = [
+        threading.Thread(target=client, args=(c,)) for c in range(n_clients)
+    ]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    n_done = 0
+    for reqs in all_reqs:
+        for r in reqs:
+            lb.result(r, timeout=60)
+        n_done += len(reqs)
+    wall = time.perf_counter() - t0
+    park_gate.set()  # release the parked solve + its backlog
+    for r in backlog:
+        lb.result(r, timeout=60)
+    lb.shutdown()
+    return n_done / wall
+
+
+def run_overhead(n_requests: int) -> float:
+    """Mean microseconds per strictly-sequential blocking submit."""
+    lb = LoadBalancer([Server(lambda x: x, name="s0")])
+    lb.submit(0)  # warm the engine (threads started, caches touched)
+    samples = []
+    for i in range(n_requests):
+        t0 = time.perf_counter()
+        lb.submit(i)
+        samples.append(time.perf_counter() - t0)
+    lb.shutdown()
+    return statistics.mean(samples) * 1e6
+
+
+def main(
+    smoke: bool = False, min_rps: float = 0.0, baseline: bool = False
+) -> List[str]:
+    baseline_threads = threading.active_count()
+    n_requests = 4096 if smoke else 16384
+    clients = (16,) if smoke else (1, 4, 16)
+
+    throughput: Dict[str, float] = {}
+    for c in clients:
+        throughput[str(c)] = run_throughput(c, n_requests)
+    overhead = run_overhead(512 if smoke else 2048)
+    leaked = threading.active_count() - baseline_threads
+
+    if baseline:
+        # Refreshing PRE_PR on the old-engine checkout: emit the literal to
+        # paste into this file, and leave BENCH_dispatch.json untouched
+        # (its speedups would be computed against the engine under test).
+        literal = {
+            "throughput_rps": {k: round(v, 1) for k, v in throughput.items()},
+            "overhead_us_per_req": round(overhead, 1),
+        }
+        return [f"PRE_PR = {json.dumps(literal, sort_keys=True)}"]
+
+    result = {
+        "benchmark": "dispatch",
+        "workload": {
+            "servers": 1 + (N_TAGS - 1) * SERVERS_PER_TAG,
+            "tags": N_TAGS,
+            "queue_depth_prefill": QUEUE_DEPTH,
+            "n_requests": n_requests,
+            "smoke": smoke,
+        },
+        "throughput_rps": {k: round(v, 1) for k, v in throughput.items()},
+        "overhead_us_per_req": round(overhead, 2),
+        "leaked_threads": leaked,
+        "pre_pr": PRE_PR,
+        "speedup_vs_pre_pr": {
+            k: round(v / PRE_PR["throughput_rps"][k], 2)
+            for k, v in throughput.items()
+            if k in PRE_PR["throughput_rps"]
+        },
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+
+    rows = [
+        f"dispatch_rps[{k}clients],{v:.0f},req/s" for k, v in throughput.items()
+    ]
+    rows.append(f"dispatch_overhead,{overhead:.1f},us/req")
+    rows.append(f"dispatch_leaked_threads,{leaked},count")
+    rows.append(f"dispatch_json,{JSON_PATH},path")
+
+    if leaked != 0:
+        raise SystemExit(f"dispatcher leaked {leaked} threads")
+    if min_rps and throughput[str(max(clients))] < min_rps:
+        raise SystemExit(
+            f"dispatch throughput regression: {throughput[str(max(clients))]:.0f}"
+            f" req/s at {max(clients)} clients < floor {min_rps:.0f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="reduced size + CI gate")
+    ap.add_argument(
+        "--min-rps", type=float, default=0.0,
+        help="fail below this req/s at the largest client count",
+    )
+    ap.add_argument(
+        "--baseline", action="store_true",
+        help="print raw numbers for refreshing PRE_PR (run on the old engine)",
+    )
+    args = ap.parse_args()
+    for row in main(smoke=args.smoke, min_rps=args.min_rps,
+                    baseline=args.baseline):
+        print(row)

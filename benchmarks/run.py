@@ -4,6 +4,7 @@
 
 Prints ``name,value,unit`` CSV rows:
   * bench_balancer  -> paper Fig. 8 (timeline) + Fig. 9 (idle times)
+  * bench_dispatch  -> dispatcher hot-path overhead (no-op servers)
   * bench_mlda      -> paper Table 1 (per-level counts / E / V)
   * bench_batch     -> batched forward-solve engine (coalesced dispatch)
   * bench_kernels   -> kernel micro-bench (CPU wall; TPU story in §Roofline)
@@ -23,13 +24,15 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true", help="skip the MLDA PDE bench")
     ap.add_argument(
         "--only", default="",
-        help="comma-separated subset (balancer,mlda,batch,kernels,gp,roofline)"
+        help="comma-separated subset "
+             "(balancer,dispatch,mlda,batch,kernels,gp,roofline)"
     )
     args = ap.parse_args()
 
     from benchmarks import (
         bench_balancer,
         bench_batch,
+        bench_dispatch,
         bench_gp,
         bench_kernels,
         bench_mlda,
@@ -38,6 +41,7 @@ def main() -> None:
 
     sections = {
         "balancer": bench_balancer.main,
+        "dispatch": lambda: bench_dispatch.main(smoke=True),
         "kernels": bench_kernels.main,
         "gp": bench_gp.main,
         "mlda": bench_mlda.main,

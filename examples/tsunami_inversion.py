@@ -95,7 +95,7 @@ def main():
         ensemble_seed=w.ensemble_seed,
         speculative=w.speculative_prefetch,
         as_runner=True,
-        **w.batch_kwargs(),
+        **w.balancer_kwargs(),
     )
     t0 = time.time()
     result = runner.run(

@@ -10,6 +10,9 @@ Layout (DESIGN.md §2-3):
 * :mod:`repro.balancer.dispatcher` — the event-driven core: one dispatch
   loop + an elastic worker pool (no thread-per-request; shrinks when
   servers retire or die);
+* :mod:`repro.balancer.queueing`   — the O(1) dispatch indexes: per-tag
+  FIFO sub-queues under a global arrival sequence (``IndexedQueue``) and
+  the incrementally-maintained free-server index (``FreeServerIndex``);
 * :mod:`repro.balancer.futures`    — client-side multi-request primitives
   (``wait_any`` / ``as_completed`` / ``gather``) so one thread can keep
   many requests outstanding (the ensemble driver's contract);
@@ -33,15 +36,19 @@ from .policies import (
     create_policy,
     register_policy,
 )
-from .telemetry import Telemetry
+from .queueing import FreeServerIndex, IndexedQueue
+from .telemetry import P2Quantile, Telemetry
 from .types import BatchServer, Request, Server, ServerDiedError, ServerStats
 
 __all__ = [
     "BatchServer",
     "CostAwarePolicy",
     "FifoPolicy",
+    "FreeServerIndex",
+    "IndexedQueue",
     "LeastLoadedPolicy",
     "LoadBalancer",
+    "P2Quantile",
     "POLICIES",
     "PolicyContext",
     "PowerOfTwoPolicy",

@@ -1,25 +1,42 @@
 """Event-driven dispatcher core (paper Algorithm 1, engine-ified).
 
 The seed implementation ran Algorithm 1's body on one OS thread *per
-request* (``submit_async`` spawned a ``threading.Thread`` each call —
-thousands of threads per MLDA run) and leaked a waiter thread for every
-request coalesced by batched dispatch.  This core replaces that with:
+request*; the first refactor replaced that with a single dispatch loop and
+a fixed worker pool, but kept the seed's *data structures*: a flat arrival
+``deque`` scanned O(queue x servers) per decision, an O(queue)
+``deque.remove``, a ``notify_all`` on every submit/free event, and
+O(servers) admission checks per submit.  At ensemble scale — sub-ms GP
+requests from dozens of chains — those scans were the scheduler overhead
+the paper's millisecond idle times leave no room for.
 
-* a single **dispatch loop** thread owning the queue/condition-variable
-  pair of Algorithm 1: it sleeps until work + a free server coexist, asks
-  the :class:`~repro.balancer.policies.SchedulingPolicy` for the next
-  (request, server) pair, marks the server busy, and hands the pair to
-* a fixed **worker pool** (one slot per server by default — a server runs
-  one request at a time, so more would be idle) that executes the handler,
-  books telemetry, frees the server and notifies the dispatcher.
+This core makes the steady-state cost of one dispatch decision O(1) in
+queue length and pool size, with unchanged observable semantics (FIFO
+fairness per tag, head-of-line-blocking avoidance across tags,
+byte-identical ``fifo`` dispatch order vs the recorded seed trace):
+
+* the arrival queue is an :class:`~repro.balancer.queueing.IndexedQueue`
+  (per-tag FIFO sub-queues under a global arrival sequence number) and a
+  :class:`~repro.balancer.queueing.FreeServerIndex` is maintained
+  incrementally on busy/free/death/retire transitions, so the policy
+  receives ready ``(request, candidates)`` pairs instead of scanning, and
+  popping the dispatched request is O(1);
+* wakeups are **targeted and mostly eliminated**: the event that makes a
+  pair ready dispatches it under the same lock acquisition.  A submit
+  drains every currently-ready pair itself and hands them straight to the
+  worker pool; a worker that frees its server grabs the next decision and
+  keeps executing without a hand-off.  The dispatcher thread survives as
+  the backstop for the cold paths (unservable sweeps after death/retire,
+  requeues, elastic resize) and is signalled only by them — no
+  ``notify_all`` herd on the hot path, and steady-state requests cost two
+  thread hops (client -> worker -> client) instead of four;
+* the coalescing window is **non-blocking**: a worker parks on an event
+  with deadline = window and fires early the moment a full ``max_batch``
+  is queued (see ``_execute_batched``), instead of unconditionally
+  sleeping a pool slot.
 
 The paper's design points survive intact: one persistent pool for the
-whole run, FIFO arrival order via an explicit queue under a mutex,
-event-driven wakeup via condition variables (no polling), zero assumptions
-about task runtimes.  What changed is purely mechanical: client threads no
-longer *are* the scheduler, they just enqueue and wait on the request's
-completion event.
-
+whole run, FIFO arrival order under a mutex, event-driven wakeup via
+condition variables (no polling), zero assumptions about task runtimes.
 ``shutdown()`` joins every thread it started, so the process thread count
 returns to its pre-balancer baseline — verified in tests.  See DESIGN.md §2.
 """
@@ -31,8 +48,21 @@ from collections import deque
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .policies import PolicyContext, SchedulingPolicy, create_policy
+from .queueing import FreeServerIndex, IndexedQueue
 from .telemetry import Telemetry
 from .types import Request, Server, ServerDiedError
+
+
+class _BatchWaiter:
+    """A worker parked in the coalescing window for ``tag``: its event is
+    set by the submit path the moment ``needed`` batchable same-tag
+    requests are queued, so a full batch never waits out the window."""
+
+    __slots__ = ("needed", "event")
+
+    def __init__(self, needed: int) -> None:
+        self.needed = needed
+        self.event = threading.Event()
 
 
 class LoadBalancer:
@@ -46,6 +76,10 @@ class LoadBalancer:
     ``round_robin``, ``least_loaded``, ``power_of_two``, ``cost_aware``) or
     accepts a :class:`SchedulingPolicy` instance.  The default ``fifo``
     reproduces the seed/paper dispatch order exactly.
+
+    ``exact_telemetry`` switches :class:`Telemetry` from its streaming
+    default (O(1) recording, bounded memory) to the exact unbounded mode
+    (full history, quantiles from full sorts) for paper-figure runs.
     """
 
     def __init__(
@@ -59,13 +93,26 @@ class LoadBalancer:
         batch_window_frac: float = 0.25,
         max_batch: int = 256,
         max_workers: Optional[int] = None,
+        exact_telemetry: bool = False,
     ) -> None:
         self._servers: List[Server] = list(servers)
         self._mutex = threading.Lock()
         self._cv = threading.Condition(self._mutex)
-        self._queue: deque[Request] = deque()
-        self._telemetry = Telemetry()
+        self._queue = IndexedQueue()
+        self._free = FreeServerIndex(self._servers)
+        self._telemetry = Telemetry(exact=exact_telemetry)
         self._policy = create_policy(policy)
+        # Policies that override select() need the flat-scan compatibility
+        # path (they may reorder the request scan); built-ins never do.
+        self._legacy_select = (
+            type(self._policy).select is not SchedulingPolicy.select
+        )
+        # With the default select_ready (take the earliest ready head) the
+        # decision needs only ONE candidate list; a policy that overrides
+        # it sees every ready (head, candidates) pair instead.
+        self._default_ready = (
+            type(self._policy).select_ready is SchedulingPolicy.select_ready
+        )
         self._ctx = PolicyContext(
             servers=self._servers, telemetry=self._telemetry, now=time.monotonic
         )
@@ -78,6 +125,7 @@ class LoadBalancer:
         self._shutdown = False
         self._started = False
         self._unservable_dirty = False  # set when a server dies / retires
+        self._batch_waiters: Dict[str, List[_BatchWaiter]] = {}
         self._dispatcher: Optional[threading.Thread] = None
         self._workers: List[threading.Thread] = []  # every worker ever started
         self._n_live_workers = 0  # workers not yet retired; guarded by _work_cv
@@ -104,17 +152,19 @@ class LoadBalancer:
     def add_server(self, server: Server) -> None:
         with self._cv:
             self._servers.append(server)
+            self._free.add(server)
             if self._started:
                 self._grow_workers_locked()
-            self._cv.notify_all()
+            self._cv.notify()
 
     def retire_server(self, name: str) -> None:
         with self._cv:
             for s in self._servers:
                 if s.name == name:
                     s.dead = True
+                    self._free.mark_dead(s)
             self._unservable_dirty = True
-            self._cv.notify_all()
+            self._cv.notify()  # wake the dispatcher for the dirty sweep
         # The worker pool sizes itself to the live-server count; wake idle
         # workers so the now-excess ones park out (see _worker_loop).
         with self._work_cv:
@@ -161,6 +211,10 @@ class LoadBalancer:
         with self._cv:
             self._shutdown = True
             self._cv.notify_all()
+            # release any worker parked in a coalescing window
+            for waiters in self._batch_waiters.values():
+                for w in waiters:
+                    w.event.set()
         with self._work_cv:
             self._work_cv.notify_all()
         if self._dispatcher is not None and self._dispatcher is not threading.current_thread():
@@ -196,18 +250,32 @@ class LoadBalancer:
         req = Request(
             theta=theta, tag=tag, batchable=batchable, arrived_at=time.monotonic()
         )
-        self._telemetry.record_arrival(req)
+        fire: Optional[List[_BatchWaiter]] = None
+        pairs: List[Tuple[Request, Server]] = []
         with self._cv:
             if self._shutdown:
                 req.error = RuntimeError("balancer shut down")
-            elif not any(not s.dead and s.accepts(tag) for s in self._servers):
+            elif not self._free.servable(tag):  # O(1) admission check
                 req.error = RuntimeError(f"no live server accepts tag '{tag}'")
             else:
                 self._ensure_started_locked()
-                self._queue.append(req)  # queue.push(request[j])
-                self._cv.notify_all()
-                return req
-        req._complete()
+                self._queue.push(req)  # queue.push(request[j])
+                # Submit-driven fast path: if this tag has a free server,
+                # take the dispatch decision here and now — no dispatcher
+                # thread wakeup, no herd.
+                if self._free.has_free_for(tag):
+                    pairs = self._drain_ready_locked()
+                if batchable:
+                    fire = self._ripe_batch_waiters_locked(tag)
+        if req.error is not None:  # rejected: never booked in telemetry
+            req._complete()
+            return req
+        self._telemetry.record_arrival(req)
+        if pairs:
+            self._hand_off(pairs)
+        if fire:
+            for w in fire:
+                w.event.set()
         return req
 
     def submit_many(
@@ -221,7 +289,8 @@ class LoadBalancer:
         finishes first, or :func:`~repro.balancer.futures.gather` for the
         barrier round trip.  All-or-nothing admission: if the pool cannot
         serve ``tag`` (or is shut down) every request completes immediately
-        with the error set.
+        with the error set — rejected requests are never booked in
+        telemetry.
         """
         reqs = [
             Request(
@@ -230,22 +299,34 @@ class LoadBalancer:
             )
             for theta in thetas
         ]
-        for req in reqs:
-            self._telemetry.record_arrival(req)
         error: Optional[str] = None
+        fire: Optional[List[_BatchWaiter]] = None
+        pairs: List[Tuple[Request, Server]] = []
         with self._cv:
             if self._shutdown:
                 error = "balancer shut down"
-            elif not any(not s.dead and s.accepts(tag) for s in self._servers):
+            elif not self._free.servable(tag):
                 error = f"no live server accepts tag '{tag}'"
             else:
                 self._ensure_started_locked()
-                self._queue.extend(reqs)
-                self._cv.notify_all()
+                for req in reqs:
+                    self._queue.push(req)
+                if reqs and self._free.has_free_for(tag):
+                    pairs = self._drain_ready_locked()
+                if batchable:
+                    fire = self._ripe_batch_waiters_locked(tag)
         if error is not None:
             for req in reqs:
                 req.error = RuntimeError(error)
                 req._complete()
+            return reqs
+        for req in reqs:
+            self._telemetry.record_arrival(req)
+        if pairs:
+            self._hand_off(pairs)
+        if fire:
+            for w in fire:
+                w.event.set()
         return reqs
 
     def result(self, req: Request, timeout: Optional[float] = None) -> Any:
@@ -257,7 +338,12 @@ class LoadBalancer:
 
     # -- dispatch loop (Algorithm 1's scheduler half) ------------------------
     def _dispatch_loop(self) -> None:
+        """Cold-path backstop: the hot paths dispatch inline (submit drains
+        ready pairs, a freeing worker grabs the next decision), so this
+        loop is signalled only by death/retire sweeps, requeues and
+        elastic resizes — it sleeps through steady-state traffic."""
         while True:
+            pairs: List[Tuple[Request, Server]] = []
             with self._cv:  # mutex.lock()
                 while True:
                     if self._shutdown:
@@ -266,17 +352,83 @@ class LoadBalancer:
                     if self._unservable_dirty:
                         self._unservable_dirty = False
                         self._fail_unservable_locked()
-                    pair = self._policy.select(self._queue, self._ctx)
-                    if pair is not None:
+                    # Drain EVERY currently-ready pair under this one lock
+                    # acquisition — one wakeup can dispatch a whole wave.
+                    pairs = self._drain_ready_locked()
+                    if pairs:
                         break
                     self._cv.wait()  # conditional_variable.wait(mutex)
-                req, server = pair
-                self._queue.remove(req)  # queue.pop() (FIFO head for our tag)
-                server.busy = True  # server.markBusy()
             # mutex.unlock() — implicit; hand off to the worker pool.
-            with self._work_cv:
-                self._work.append((req, server))
-                self._work_cv.notify()
+            self._hand_off(pairs)
+
+    def _drain_ready_locked(self) -> List[Tuple[Request, Server]]:
+        """Take every dispatch decision currently possible (caller holds
+        the mutex): pop each chosen request, mark its server busy."""
+        pairs: List[Tuple[Request, Server]] = []
+        while True:
+            pair = self._select_locked()
+            if pair is None:
+                return pairs
+            req, server = pair
+            self._queue.pop(req)  # O(1): req is its tag's head
+            server.busy = True  # server.markBusy()
+            self._free.mark_busy(server)
+            pairs.append(pair)
+
+    def _hand_off(self, pairs: List[Tuple[Request, Server]]) -> None:
+        with self._work_cv:
+            if not self._shutdown:
+                self._work.extend(pairs)
+                if len(pairs) == 1:
+                    self._work_cv.notify()
+                else:
+                    self._work_cv.notify_all()
+                return
+        # Shutdown raced us between draining these pairs and handing them
+        # off: the workers may already be joined and the final sweeps done,
+        # so enqueueing now would strand the clients forever.  Fail the
+        # pairs exactly like the shutdown sweep would have.
+        for req, server in pairs:
+            server.busy = False
+            req.error = RuntimeError("balancer shut down")
+            req._complete()
+
+    def _select_locked(self) -> Optional[Tuple[Request, Server]]:
+        """One dispatch decision over the indexed structures.
+
+        Builds the ready ``(head request, candidates)`` pair per
+        dispatchable tag — O(distinct queued tags), each candidate list
+        O(free servers accepting that tag) — and lets the policy choose.
+        Falls back to the flat O(queue x servers) reference scan only for
+        legacy policies that override ``select``.
+        """
+        if not self._queue:
+            return None
+        if self._legacy_select:
+            return self._policy.select(list(self._queue), self._ctx)
+        if self._default_ready:
+            # Fast path: the default select_ready takes the earliest ready
+            # head, so find it with O(1) has_free_for probes and build the
+            # candidate list once, for that tag only.
+            best: Optional[Request] = None
+            for tag, head in self._queue.heads():
+                if (best is None or head.seq < best.seq) and (
+                    self._free.has_free_for(tag)
+                ):
+                    best = head
+            if best is None:
+                return None
+            candidates = self._free.candidates(best.tag)
+            return best, self._policy.choose_server(best, candidates, self._ctx)
+        ready: List[Tuple[Request, List[Server]]] = []
+        for tag, head in self._queue.heads():
+            candidates = self._free.candidates(tag)
+            if candidates:
+                ready.append((head, candidates))
+        if not ready:
+            return None
+        ready.sort(key=lambda rc: rc[0].seq)  # earliest arrival first
+        return self._policy.select_ready(ready, self._ctx)
 
     def _fail_unservable_locked(self) -> None:
         """Fail queued requests whose tag no live server accepts.
@@ -284,49 +436,59 @@ class LoadBalancer:
         Runs only after a server death/retirement (``_unservable_dirty``) —
         servability never shrinks otherwise, and requests with an unservable
         tag are rejected at submit time — so the dispatch hot path stays
-        O(policy.select) per wakeup.
+        O(queued tags) per wakeup.
         """
-        servable: deque[Request] = deque()
-        while self._queue:
-            req = self._queue.popleft()
-            if any(not s.dead and s.accepts(req.tag) for s in self._servers):
-                servable.append(req)
-            else:
-                req.error = RuntimeError(
-                    f"no live server accepts tag '{req.tag}'"
-                )
-                req._complete()
-        self._queue.extend(servable)
+        for tag in self._queue.tags():
+            if not self._free.servable(tag):
+                for req in self._queue.drain_tag(tag):
+                    req.error = RuntimeError(
+                        f"no live server accepts tag '{req.tag}'"
+                    )
+                    req._complete()
 
     def _fail_queued_locked(self, msg: str) -> None:
-        while self._queue:
-            req = self._queue.popleft()
+        for req in self._queue.drain_all():
             req.error = RuntimeError(msg)
             req._complete()
 
     # -- worker pool (Algorithm 1's execution half) --------------------------
     def _worker_loop(self) -> None:
+        pair: Optional[Tuple[Request, Server]] = None
         while True:
-            with self._work_cv:
-                while not self._work:
-                    if self._shutdown:
-                        return
-                    if self._n_live_workers > self._n_workers_wanted():
-                        # Pool shrank (server retired/died): park this
-                        # worker out rather than idling forever.  Checked
-                        # only when idle, so queued work is never abandoned.
-                        self._n_live_workers -= 1
-                        return
-                    self._work_cv.wait()
-                req, server = self._work.popleft()
-            self._execute(req, server)
+            if pair is None:
+                with self._work_cv:
+                    while not self._work:
+                        if self._shutdown:
+                            return
+                        if self._n_live_workers > self._n_workers_wanted():
+                            # Pool shrank (server retired/died): park this
+                            # worker out rather than idling forever.  Checked
+                            # only when idle, so queued work is never abandoned.
+                            self._n_live_workers -= 1
+                            return
+                        self._work_cv.wait()
+                    pair = self._work.popleft()
+            elif self._work:  # lock-free peek; cheap no-op when empty
+                # Fairness: with max_workers below the ready-server count,
+                # pairs can be parked in the hand-off deque while this
+                # worker chains completion-driven grabs.  Rotate the
+                # grabbed pair behind them so hand-offs never starve.
+                with self._work_cv:
+                    if self._work:
+                        self._work.append(pair)
+                        pair = self._work.popleft()
+            # Completion-driven fast path: _execute frees the server and,
+            # under the same lock acquisition, grabs the next ready
+            # decision — this worker keeps going with zero hand-offs.
+            pair = self._execute(*pair)
 
-    def _execute(self, req: Request, server: Server) -> None:
+    def _execute(
+        self, req: Request, server: Server
+    ) -> Optional[Tuple[Request, Server]]:
         req.dispatched_at = time.monotonic()
         req.server = server.name
         if req.batchable and server.batch_fn is not None and self.batch_window_s > 0:
-            self._execute_batched(req, server)
-            return
+            return self._execute_batched(req, server)
         try:
             if server.batch_fn is not None:
                 # Batch-capable servers evaluate through batch_call even for
@@ -340,7 +502,7 @@ class LoadBalancer:
                 result = server.fn(req.theta)  # return server(request[j])
         except Exception:  # noqa: BLE001 - any worker fault kills the server
             self._fail_dispatch(req, server)
-            return
+            return None
         req.completed_at = time.monotonic()
         if isinstance(result, BaseException):
             req.error = result
@@ -348,14 +510,32 @@ class LoadBalancer:
         else:
             req.result = result
         self._telemetry.record_completion(req, server)
-        self._free_server(server)
+        nxt = self._free_server(server)
         req._complete()
+        return nxt
 
-    def _free_server(self, server: Server) -> None:
-        with self._cv:  # reset busyness once done + notify_all()
+    def _free_server(self, server: Server) -> Optional[Tuple[Request, Server]]:
+        """Free ``server`` and grab the next ready dispatch decision.
+
+        Freeing one server makes at most one new pair ready (every other
+        ready pair was dispatched by the event that created it), so the
+        calling worker executes the grabbed pair itself — the decision
+        happens under the same lock acquisition as the free transition,
+        with no dispatcher wakeup and no hand-off queue in between.
+        """
+        with self._cv:  # reset busyness once done
             server.busy = False
             server.last_free_at = time.monotonic()
-            self._cv.notify_all()
+            self._free.mark_free(server)
+            if self._queue and not self._shutdown:
+                pair = self._select_locked()
+                if pair is not None:
+                    nreq, nserver = pair
+                    self._queue.pop(nreq)
+                    nserver.busy = True
+                    self._free.mark_busy(nserver)
+                    return pair
+        return None
 
     def _fail_dispatch(self, req: Request, server: Server) -> None:
         """A handler raised: mark the server dead, retry or fail ``req``."""
@@ -363,8 +543,9 @@ class LoadBalancer:
         with self._cv:
             server.dead = True
             server.busy = False
+            self._free.mark_dead(server)
             self._unservable_dirty = True
-            self._cv.notify_all()
+            self._cv.notify()  # dirty sweep must run even with no free server
         with self._work_cv:  # a death shrinks the pool like a retire
             self._work_cv.notify_all()
         req.retries += 1
@@ -379,14 +560,14 @@ class LoadBalancer:
     def _requeue(self, req: Request) -> None:
         with self._cv:
             if not self._shutdown:
-                self._queue.append(req)  # re-enter Algorithm 1
+                self._queue.push(req)  # re-enter Algorithm 1
                 # The server that failed this request may have been its only
                 # compatible one, and the dispatcher may already have consumed
                 # the death's dirty flag before we re-enqueued — re-arm it so
                 # the next wakeup re-checks servability instead of parking
                 # the request forever.
                 self._unservable_dirty = True
-                self._cv.notify_all()
+                self._cv.notify()
                 return
             req.error = RuntimeError("balancer shut down")
         req._complete()
@@ -407,7 +588,17 @@ class LoadBalancer:
             return self.batch_window_s
         return min(self.batch_window_s, self.batch_window_frac * ewma)
 
-    def _execute_batched(self, req: Request, server: Server) -> None:
+    def _ripe_batch_waiters_locked(self, tag: str) -> Optional[List[_BatchWaiter]]:
+        """Batch waiters for ``tag`` whose member threshold is now met."""
+        waiters = self._batch_waiters.get(tag)
+        if not waiters:
+            return None
+        queued = self._queue.count_batchable(tag)
+        return [w for w in waiters if queued >= w.needed] or None
+
+    def _execute_batched(
+        self, req: Request, server: Server
+    ) -> Optional[Tuple[Request, Server]]:
         """Coalesce queued batchable same-tag requests into ONE server call.
 
         ``server.batch_call`` receives every member theta at once — for a
@@ -422,33 +613,45 @@ class LoadBalancer:
         FIFO fairness: members are drained from the arrival queue in
         arrival order and non-matching requests keep their relative order,
         so batching never reorders requests within a tag nor starves other
-        tags.  The coalescing window is only paid when a same-tag batchable
-        peer is already queued at dispatch time.
+        tags.  The window is **non-blocking**: it is only armed when some
+        (but not a full batch of) same-tag batchable peers are queued at
+        dispatch time, and the worker parks on an event the submit path
+        fires the moment the ``max_batch``-th member arrives — a full
+        batch never waits out the window, a lone request never pays it.
         """
-        with self._mutex:
-            has_peer = any(
-                r.batchable and r.tag == req.tag for r in self._queue
-            )
-        if has_peer:
-            window = self._coalesce_window(req.tag)
-            if window > 0:
-                time.sleep(window)
         limit = self.max_batch
         if getattr(server, "max_batch", None):
             limit = min(limit, server.max_batch)
-        extra: List[Request] = []
+        waiter: Optional[_BatchWaiter] = None
+        window = 0.0
         with self._cv:
-            keep: deque[Request] = deque()
-            while self._queue and len(extra) < limit - 1:
-                r = self._queue.popleft()
-                if r.batchable and r.tag == req.tag:
-                    extra.append(r)
-                else:
-                    keep.append(r)
-            while keep:
-                self._queue.appendleft(keep.pop())
+            queued = self._queue.count_batchable(req.tag)
+        if 0 < queued < limit - 1 and not self._shutdown:
+            # Size the window OUTSIDE the dispatcher mutex: tag_ewma takes
+            # the telemetry lock and may fold a pending backlog — that must
+            # never stall concurrent submit/free traffic on _cv.
+            window = self._coalesce_window(req.tag)
+            if window > 0:
+                with self._cv:
+                    queued = self._queue.count_batchable(req.tag)
+                    if 0 < queued < limit - 1 and not self._shutdown:
+                        waiter = _BatchWaiter(needed=limit - 1)
+                        self._batch_waiters.setdefault(req.tag, []).append(waiter)
+        if waiter is not None:
+            waiter.event.wait(window)  # early-fired by the submit path
+            with self._cv:
+                waiters = self._batch_waiters.get(req.tag)
+                if waiters is not None:
+                    try:
+                        waiters.remove(waiter)
+                    except ValueError:
+                        pass
+                    if not waiters:
+                        del self._batch_waiters[req.tag]
+        with self._cv:
+            extra = self._queue.drain_batchable(req.tag, limit - 1)
         members = [req] + extra
-        # Re-stamp the primary past the coalescing sleep: the window is
+        # Re-stamp the primary past the coalescing wait: the window is
         # queueing, not service — booking it as service time would inflate
         # the tag EWMA that sizes the adaptive window (a feedback loop,
         # bounded only by the cap) and the busy-seconds utilization metric.
@@ -471,15 +674,15 @@ class LoadBalancer:
                         continue
                     r.dispatched_at = 0.0
                     r.server = None
-                    self._queue.appendleft(r)
-                self._cv.notify_all()
+                    self._queue.push_front(r)  # original seq: order kept
+                self._cv.notify()
             for r in exhausted:
                 r.error = ServerDiedError(
                     f"request failed after {r.retries} attempts"
                 )
                 r._complete()
             self._fail_dispatch(req, server)
-            return
+            return None
         done = time.monotonic()
         for r, res in zip(members, results):
             r.completed_at = done
@@ -496,9 +699,10 @@ class LoadBalancer:
         self._telemetry.record_completion(req, server)
         self._telemetry.record_batched(extra, server)
         self._telemetry.record_batch_size(req.tag, len(members))
-        self._free_server(server)
+        nxt = self._free_server(server)
         for r in members:
             r._complete()
+        return nxt
 
     # -- straggler hedging (beyond paper) ------------------------------------
     def runtime_quantile(self, tag: str, q: float) -> Optional[float]:
@@ -519,9 +723,20 @@ class LoadBalancer:
         backup = self.submit_async(theta, tag=tag)
         backup.hedged = True  # presumed loser until proven otherwise
         first_done = threading.Event()  # set by whichever copy finishes first
-        primary.add_done_callback(lambda _r: first_done.set())
-        backup.add_done_callback(lambda _r: first_done.set())
-        first_done.wait()
+
+        def notify(_r: Request) -> None:
+            first_done.set()
+
+        primary.add_done_callback(notify)
+        backup.add_done_callback(notify)
+        try:
+            first_done.wait()
+        finally:
+            # Deregister from BOTH copies: the loser completes after the
+            # race is resolved and must not touch this (now dead) event —
+            # nor accumulate a stale closure for the rest of its life.
+            primary.remove_done_callback(notify)
+            backup.remove_done_callback(notify)
         for winner, loser in ((primary, backup), (backup, primary)):
             if winner.done.is_set() and winner.error is None:
                 break
@@ -532,6 +747,9 @@ class LoadBalancer:
             )
         winner.hedged = False
         loser.hedged = True
+        # Streaming telemetry folds idle times in at completion; repair the
+        # aggregates for completions that landed before the flags settled.
+        self._telemetry.rebook_hedged(winner, loser)
         return self.result(winner)
 
     # -- telemetry (paper Figs. 8 & 9) ---------------------------------------

@@ -53,9 +53,20 @@ class PolicyContext:
 class SchedulingPolicy:
     """Strategy interface: pick the next (request, server) pair to dispatch.
 
-    Subclasses normally override only :meth:`choose_server`; override
-    :meth:`select` for policies that need to change request scan order
-    (none of the built-ins do — FIFO fairness is a shared invariant).
+    Subclasses normally override only :meth:`choose_server` — the policy
+    author's contract is *choosing a server from ready candidates*, not
+    scanning the queue.  On the dispatch hot path the engine maintains
+    per-tag FIFO sub-queues and a free-server index
+    (:mod:`repro.balancer.queueing`) and calls :meth:`select_ready` with
+    the already-derived ready pairs, so a decision costs O(queued tags),
+    not O(queue x servers).
+
+    :meth:`select` is the flat-scan *reference implementation* of the same
+    semantics.  It remains the contract for simulators (the fake-clock
+    test harness) and for legacy policies that override it to change
+    request scan order — the dispatcher detects such an override and falls
+    back to the flat path for them (none of the built-ins do: FIFO
+    fairness is a shared invariant, enforced by the index).
     """
 
     name: str = "abstract"
@@ -80,6 +91,24 @@ class SchedulingPolicy:
                 return req, self.choose_server(req, candidates, ctx)
             # req stays queued; requests behind it may still match others.
         return None
+
+    def select_ready(
+        self,
+        ready: Sequence[Tuple[Request, List[Server]]],
+        ctx: PolicyContext,
+    ) -> Tuple[Request, Server]:
+        """Indexed hot path: pick from pre-derived ready pairs.
+
+        ``ready`` holds one ``(head request, free compatible servers)``
+        pair per dispatchable tag, ordered by arrival sequence — element 0
+        is exactly the request the flat scan of :meth:`select` would have
+        chosen, and the candidate list is in pool order like the flat
+        scan's.  The default takes it and delegates to
+        :meth:`choose_server`, which keeps every built-in policy
+        decision-for-decision identical to the reference implementation.
+        """
+        req, candidates = ready[0]
+        return req, self.choose_server(req, candidates, ctx)
 
     def choose_server(
         self, req: Request, candidates: Sequence[Server], ctx: PolicyContext

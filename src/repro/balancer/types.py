@@ -25,13 +25,29 @@ class ServerStats:
     lock); read freely for reporting.
     """
 
-    busy_intervals: List[Tuple[float, float]] = field(default_factory=list)
-    tags: List[str] = field(default_factory=list)
+    # one (start, end, tag) row per completed dispatch — a single log so a
+    # lock-free reader can snapshot intervals and tags in one atomic
+    # list(...) call with no risk of cross-ring misalignment
+    busy_log: List[Tuple[float, float, str]] = field(default_factory=list)
     n_requests: int = 0
     n_failures: int = 0
+    busy_s: float = 0.0  # running total; survives the busy_log ring buffer
+
+    @property
+    def busy_intervals(self) -> List[Tuple[float, float]]:
+        log = list(self.busy_log)  # atomic snapshot (single C call)
+        return [(a, b) for a, b, _ in log]
+
+    @property
+    def tags(self) -> List[str]:
+        log = list(self.busy_log)
+        return [t for _, _, t in log]
 
     def uptime(self) -> float:
-        return sum(b - a for a, b in self.busy_intervals)
+        """Total busy seconds.  Kept as a running sum so it stays exact in
+        streaming-telemetry mode, where ``busy_log`` is a bounded ring
+        holding only the most recent intervals."""
+        return self.busy_s
 
 
 class Server:
@@ -169,6 +185,12 @@ class Request:        # numpy thetas ("truth value ambiguous" in queue.remove)
     error: Optional[BaseException] = None
     done: threading.Event = field(default_factory=threading.Event, repr=False)
     hedged: bool = False
+    # global arrival sequence number, stamped by the dispatcher's indexed
+    # queue at admission; orders requests across per-tag sub-queues
+    seq: int = -1
+    # set by streaming telemetry once this request's queue delay has been
+    # folded into the running idle moments (guards double/late booking)
+    idle_booked: bool = field(default=False, repr=False)
 
     def __post_init__(self) -> None:
         self._callbacks: List[Callable[["Request"], None]] = []

@@ -50,6 +50,11 @@ class MLDAWorkloadConfig:
     batch_solves: bool = True
     max_batch: int = 8
     batch_window_s: float = 0.01
+    # telemetry mode (DESIGN.md §2): the streaming default records in O(1)
+    # with bounded memory (running moments + P2 quantile estimators); set
+    # exact_telemetry for paper-figure runs that need exact quantiles over
+    # the full, unbounded request history.
+    exact_telemetry: bool = False
 
     @property
     def batchable_levels(self) -> Tuple[int, ...]:
@@ -61,6 +66,14 @@ class MLDAWorkloadConfig:
         if not self.batch_solves:
             return {}
         return {"batch_window_s": self.batch_window_s, "max_batch": self.max_batch}
+
+    def balancer_kwargs(self) -> Dict[str, object]:
+        """All balancer construction kwargs this config implies (batching
+        plus telemetry mode) — what examples/benchmarks should splat."""
+        kwargs = self.batch_kwargs()
+        if self.exact_telemetry:
+            kwargs["exact_telemetry"] = True
+        return kwargs
 
 
 PAPER = MLDAWorkloadConfig(

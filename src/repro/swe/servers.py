@@ -12,6 +12,12 @@ back-to-back solves.  Pass the scenario-built batch forwards via
 ``batch_forwards=(gp_batch, coarse_batch, fine_batch)`` or let this module
 derive them (``gp.batch_call`` exists on the GP; SWE levels need the
 ``TohokuScenario.build_batch_forward`` callables).
+
+Each level's tag (``level0``/``level1``/``level2``) is a key in the
+dispatcher's per-tag queue and free-server indexes (DESIGN.md §2): the
+coalescing window fires early the moment ``max_batch`` same-level solves
+are queued, so a saturated level never idles a pool slot waiting out
+``batch_window_s``, and a lone solve never pays the window at all.
 """
 from __future__ import annotations
 

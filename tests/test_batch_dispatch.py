@@ -163,6 +163,90 @@ def test_batch_histogram_telemetry():
     lb.shutdown()
 
 
+def test_full_batch_fires_early_without_waiting_out_window():
+    """Non-blocking coalescing window: the worker parks on an event with
+    deadline = window and is fired the moment the ``max_batch``-th same-tag
+    member arrives — a full batch never sleeps out the window."""
+    window = 1.0
+    calls = []
+    park = threading.Event()
+    first = threading.Event()
+
+    def batch_fn(stacked):
+        if not first.is_set():
+            first.set()
+            park.wait(5)
+        calls.append(stacked.shape[0])
+        return stacked * 2.0
+
+    lb = LoadBalancer(
+        [BatchServer(batch_fn, max_batch=4)],
+        batch_window_s=window, batch_window_frac=100.0, max_batch=4,
+    )
+    warm = lb.submit_async(np.array([0.0]), tag="t", batchable=True)
+    time.sleep(0.05)  # warm parks the server
+    reqs = [lb.submit_async(np.array([float(i)]), tag="t", batchable=True)
+            for i in (1, 2)]
+    t0 = time.monotonic()
+    park.set()  # warm completes; the next dispatch arms the window (1 peer
+    time.sleep(0.15)  # queued < max_batch - 1), and the worker parks in it
+    reqs += [lb.submit_async(np.array([float(i)]), tag="t", batchable=True)
+             for i in (3, 4)]  # the max_batch-th member fires the waiter
+    for r in [warm] + reqs:
+        lb.result(r, timeout=5)
+    elapsed = time.monotonic() - t0
+    assert 4 in calls, f"full batch did not coalesce: {calls}"
+    assert elapsed < 0.6 * window, (
+        f"batch waited out the window ({elapsed:.2f}s >= {window}s)"
+    )
+    lb.shutdown()
+
+
+def test_already_full_batch_pays_no_window_at_dispatch():
+    """A queue already holding >= max_batch same-tag members dispatches the
+    batch immediately — the window is never armed."""
+    window = 1.0
+    calls = []
+    park = threading.Event()
+    first = threading.Event()
+
+    def batch_fn(stacked):
+        if not first.is_set():
+            first.set()
+            park.wait(5)
+        calls.append(stacked.shape[0])
+        return stacked
+
+    lb = LoadBalancer(
+        [BatchServer(batch_fn, max_batch=3)],
+        batch_window_s=window, batch_window_frac=100.0,
+    )
+    warm = lb.submit_async(np.array([0.0]), tag="t", batchable=True)
+    time.sleep(0.05)
+    reqs = [lb.submit_async(np.array([float(i)]), tag="t", batchable=True)
+            for i in range(1, 4)]  # full batch + spare already queued
+    t0 = time.monotonic()
+    park.set()
+    for r in [warm] + reqs:
+        lb.result(r, timeout=5)
+    assert time.monotonic() - t0 < 0.5 * window, "paid the window when full"
+    assert 3 in calls
+    lb.shutdown()
+
+
+def test_lone_batchable_request_pays_zero_window_batchserver():
+    """A lone batchable request on a BatchServer executes immediately —
+    there is nothing to coalesce, so the window is never armed."""
+    window = 0.5
+    lb = LoadBalancer([BatchServer(lambda st: st * 2.0)],
+                      batch_window_s=window)
+    t0 = time.monotonic()
+    assert lb.submit(np.array([3.0]), tag="t", batchable=True)[0] == 6.0
+    assert time.monotonic() - t0 < window / 2, "lone request paid the window"
+    assert lb.telemetry.batch_histogram("t") == {1: 1}
+    lb.shutdown()
+
+
 def test_server_max_batch_caps_coalescing():
     sizes = []
 
