@@ -38,7 +38,14 @@ from .policies import (
 )
 from .queueing import FreeServerIndex, IndexedQueue
 from .telemetry import P2Quantile, Telemetry
-from .types import BatchServer, Request, Server, ServerDiedError, ServerStats
+from .types import (
+    BatchServer,
+    Request,
+    Server,
+    ServerDiedError,
+    ServerStats,
+    ShardedBatchServer,
+)
 
 __all__ = [
     "BatchServer",
@@ -58,6 +65,7 @@ __all__ = [
     "Server",
     "ServerDiedError",
     "ServerStats",
+    "ShardedBatchServer",
     "Telemetry",
     "as_completed",
     "available_policies",

@@ -8,7 +8,7 @@ magnitude); 'cpu' is the laptop-scale variant used by examples and tests.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -55,6 +55,15 @@ class MLDAWorkloadConfig:
     # exact_telemetry for paper-figure runs that need exact quantiles over
     # the full, unbounded request history.
     exact_telemetry: bool = False
+    # device-resident ensemble (DESIGN.md §9): advance all chains' coarse
+    # subchains as ONE fused vmapped device kernel, surfacing to the
+    # balancer only for fine-level solves; device_chunk is the fused
+    # steps-per-host-sync in the fully-fused mode.  mesh_devices caps the
+    # 1-D ("data",) mesh used for shard_map'd batch pools (None = all
+    # local devices; sharded pools need batch_solves).
+    device_resident: bool = False
+    device_chunk: int = 16
+    mesh_devices: Optional[int] = None
 
     @property
     def batchable_levels(self) -> Tuple[int, ...]:

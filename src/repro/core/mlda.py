@@ -617,6 +617,9 @@ def balanced_mlda(
     n_chains: int = 1,
     ensemble_seed: int = 0,
     as_runner: bool = False,
+    device_resident: bool = False,
+    device_densities: Optional[Sequence[Callable]] = None,
+    device_chunk: int = 16,
     **balancer_kwargs,
 ) -> Tuple[Any, LoadBalancer]:
     """Wire an MLDA hierarchy through the load balancer in one call.
@@ -644,9 +647,34 @@ def balanced_mlda(
     A level listed in both ``batchable_levels`` and ``hedged_levels`` is
     hedged, not batched (duplicated submissions are never coalesced).
 
+    Device-resident mode: with ``device_resident=True`` the levels below
+    the top run as ONE fused vmapped kernel on the accelerator
+    (:class:`repro.core.mlda_jax.DeviceEnsemble`) and only the finest
+    level's solves go through the balancer.  ``device_densities`` must
+    then supply the pure-JAX log-posteriors of levels ``0 .. L-1``
+    (coarse -> fine; e.g. GP surrogate + jitted coarse PDE likelihoods);
+    the return value is ``(DeviceEnsembleRunner, balancer)`` and
+    ``proposal`` only contributes its ``scale`` (the kernel implements the
+    random walk itself, fp32).  ``speculative``/``hedged_levels`` are
+    step-machine features and must be off.
+
     Returns ``(sampler_or_runner, balancer)``; call ``balancer.shutdown()``
     when done.
     """
+    n_levels = len(subchain_lengths) + 1
+    if device_resident:
+        # Validate before the balancer exists: a bad call must not leave
+        # dispatcher threads running.
+        if device_densities is None or len(device_densities) != n_levels - 1:
+            raise ValueError(
+                "device_resident needs device_densities for levels "
+                f"0..{n_levels - 2} ({n_levels - 1} densities, coarse->fine)"
+            )
+        if speculative or hedged_levels:
+            raise ValueError(
+                "speculative prefetch and hedging are step-machine features; "
+                "the fused kernel has neither"
+            )
     if isinstance(servers_or_balancer, LoadBalancer):
         balancer = servers_or_balancer
         if policy is not None and policy != balancer.policy.name:
@@ -665,7 +693,35 @@ def balanced_mlda(
         balancer = LoadBalancer(
             servers_or_balancer, policy=policy or "fifo", **balancer_kwargs
         )
-    n_levels = len(subchain_lengths) + 1
+
+    if device_resident:
+        from repro.core.mlda_jax import make_device_ensemble  # cycle-free
+        from repro.ensemble import DeviceEnsembleRunner
+
+        top = n_levels - 1
+        fine = BalancedDensity(
+            balancer,
+            level_tag(top),
+            log_likelihood,
+            log_prior,
+            batchable=top in batchable_levels,
+        )
+        ensemble = make_device_ensemble(
+            device_densities,
+            subchain_lengths,
+            getattr(proposal, "scale", 1.0),
+            remote_top=True,
+            randomize=randomize,
+            cache_key=("balanced_mlda",),
+        )
+        runner = DeviceEnsembleRunner(
+            ensemble,
+            fine_density=fine,
+            seed=ensemble_seed,
+            chunk=device_chunk,
+            balancer=balancer,
+        )
+        return runner, balancer
 
     def make_sampler(prop: Proposal) -> MLDASampler:
         densities = [

@@ -12,9 +12,23 @@ Entry points:
 * :class:`EnsembleRunner`  — drive N per-chain samplers (own proposal,
   RNG stream, LevelRecords) to completion; returns an
   :class:`EnsembleResult` with pooled cross-chain diagnostics;
+* :class:`DeviceEnsembleRunner` — the ``device_resident=True`` mode: all
+  chains advance in lockstep inside fused device launches
+  (:class:`repro.core.mlda_jax.DeviceEnsemble`), surfacing to the balancer
+  only for fine-level solves (DESIGN.md §9);
 * :func:`repro.core.mlda.balanced_mlda` with ``n_chains > 1`` — builds the
   runner and the shared balancer in one call.
 """
-from .runner import EnsembleResult, EnsembleRunner
+from .runner import (
+    DeviceChainStats,
+    DeviceEnsembleRunner,
+    EnsembleResult,
+    EnsembleRunner,
+)
 
-__all__ = ["EnsembleResult", "EnsembleRunner"]
+__all__ = [
+    "DeviceChainStats",
+    "DeviceEnsembleRunner",
+    "EnsembleResult",
+    "EnsembleRunner",
+]

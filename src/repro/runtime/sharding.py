@@ -79,6 +79,35 @@ def make_policy(
     return ShardingPolicy(mesh=mesh, dp_axes=base, fsdp=fsdp, seq_parallel=seq_parallel)
 
 
+def data_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D ``("data",)`` mesh over the host's devices.
+
+    The UQ stack's batch pools are pure data parallelism — there is no
+    model axis to shard, so the transformer-oriented :func:`make_policy`
+    requirement of a ``model`` mesh axis does not apply.  ``n_devices``
+    trims the device list (default: all of them)."""
+    devices = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devices):
+            raise ValueError(
+                f"requested {n_devices} devices, have {len(devices)}"
+            )
+        devices = devices[:n_devices]
+    import numpy as _np
+
+    return Mesh(_np.asarray(devices), ("data",))
+
+
+def data_policy(mesh: Optional[Mesh] = None) -> ShardingPolicy:
+    """Pure-DP :class:`ShardingPolicy` for batch pools: every mesh axis is
+    a data axis, no model axis.  ``batch_axes`` then gives the standard
+    divisibility fallback (an indivisible batch stays unsharded)."""
+    mesh = mesh if mesh is not None else data_mesh()
+    return ShardingPolicy(
+        mesh=mesh, dp_axes=tuple(mesh.axis_names), model_axis=None, fsdp=False
+    )
+
+
 def choose_policy(cfg, shape, mesh, *, seq_parallel: bool = False) -> ShardingPolicy:
     """Per-(arch, shape) layout selection (DESIGN.md §5).
 

@@ -197,6 +197,25 @@ class TohokuScenario:
         forward.executables = cache.executables
         return forward
 
+    def build_stacked_forward(self) -> Callable:
+        """Traceable thetas ``(B, 2)`` -> observables ``(B, 4)``.
+
+        The raw ``jax.vmap`` of the single forward, with NO jit/AOT/padding
+        wrapper — :class:`repro.balancer.types.ShardedBatchServer` needs a
+        traceable stacked callable it can ``shard_map`` over the device
+        mesh and AOT-compile itself (``build_batch_forward`` returns an
+        already-compiled Python callable, which cannot be re-traced).
+        """
+        single = self.build_forward()
+        vmapped = jax.vmap(single)
+
+        def forward(thetas: jax.Array) -> jax.Array:
+            return vmapped(thetas)
+
+        forward.n_steps = single.n_steps
+        forward.dt = single.dt
+        return forward
+
     def build_series_forward(self) -> Callable:
         """theta -> full probe-0 SSHA time series (for the Fig. 6 GP)."""
         solver = make_solver(

@@ -13,6 +13,14 @@ back-to-back solves.  Pass the scenario-built batch forwards via
 derive them (``gp.batch_call`` exists on the GP; SWE levels need the
 ``TohokuScenario.build_batch_forward`` callables).
 
+With a :class:`repro.runtime.sharding.ShardingPolicy` (``policy=``) a level
+whose *traceable* stacked forward is available (``stacked_forwards=``, from
+``TohokuScenario.build_stacked_forward``) becomes ONE
+:class:`repro.balancer.types.ShardedBatchServer` pool instead of
+``servers_per_level`` thread replicas: the coalesced batch is
+``shard_map``'d over the data axes of the device mesh, so the balancer
+schedules across mesh shards, not threads (DESIGN.md §9).
+
 Each level's tag (``level0``/``level1``/``level2``) is a key in the
 dispatcher's per-tag queue and free-server indexes (DESIGN.md §2): the
 coalescing window fires early the moment ``max_batch`` same-level solves
@@ -26,7 +34,7 @@ from typing import Callable, List, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.balancer import BatchServer, Server
+from repro.balancer import BatchServer, Server, ShardedBatchServer
 
 
 def make_level_servers(
@@ -36,6 +44,8 @@ def make_level_servers(
     f_fine: Callable,
     *,
     batch_forwards: Optional[Sequence[Optional[Callable]]] = None,
+    stacked_forwards: Optional[Sequence[Optional[Callable]]] = None,
+    policy=None,
 ) -> List[Server]:
     """One GP server + the config's per-level coarse/fine SWE servers.
 
@@ -51,19 +61,46 @@ def make_level_servers(
     ``(level0, level1, level2)`` stacked handlers — ``None`` entries fall
     back too.  The GP's own :meth:`~repro.core.gp.GaussianProcess.batch_call`
     is used automatically when no explicit level-0 handler is given.
+
+    When ``policy`` (a :class:`~repro.runtime.sharding.ShardingPolicy`) is
+    also given, levels with a traceable stacked forward
+    (``stacked_forwards``; the GP's ``batch_call`` again fills level 0)
+    become a single :class:`ShardedBatchServer` pool each —
+    ``servers_per_level`` replica counts are ignored for those levels,
+    since the mesh shards replace the thread replicas.
     """
     batching = bool(getattr(w, "batch_solves", False))
     max_batch = int(getattr(w, "max_batch", 8)) or None
+    if policy is None and batching and getattr(w, "mesh_devices", None):
+        # The config asked for a device mesh (MLDAWorkloadConfig.mesh_devices)
+        # without the caller building a policy: derive it here so setting the
+        # knob alone shards the pools.
+        from repro.runtime.sharding import data_mesh, data_policy
+
+        policy = data_policy(data_mesh(w.mesh_devices))
     bf = list(batch_forwards or (None, None, None))
     while len(bf) < 3:
         bf.append(None)
     if batching and bf[0] is None and hasattr(gp, "batch_call"):
         bf[0] = gp.batch_call
+    sf = list(stacked_forwards or (None, None, None))
+    while len(sf) < 3:
+        sf.append(None)
+    if policy is not None and sf[0] is None and hasattr(gp, "batch_call"):
+        sf[0] = gp.batch_call
+
+    def sharded(level: int) -> bool:
+        return batching and policy is not None and sf[level] is not None
 
     def batched(fn: Callable) -> Callable:
         return lambda ts: np.asarray(fn(jnp.asarray(ts)))
 
     def server(level: int, single: Callable, name: str, tag: str) -> Server:
+        if sharded(level):
+            return ShardedBatchServer(
+                sf[level], policy, name=name, capacity_tags=(tag,),
+                max_batch=max_batch, cache_key=("pool", tag),
+            )
         if batching and bf[level] is not None:
             return BatchServer(
                 batched(bf[level]), name=name, capacity_tags=(tag,),
@@ -75,8 +112,14 @@ def make_level_servers(
         )
 
     servers = [server(0, gp, "gp-0", "level0")]
-    for i in range(max(w.servers_per_level.get(1, 1), 1)):
-        servers.append(server(1, f_coarse, f"coarse-{i}", "level1"))
-    for i in range(max(w.servers_per_level.get(2, 1), 1)):
-        servers.append(server(2, f_fine, f"fine-{i}", "level2"))
+    if sharded(1):
+        servers.append(server(1, f_coarse, "coarse-pool", "level1"))
+    else:
+        for i in range(max(w.servers_per_level.get(1, 1), 1)):
+            servers.append(server(1, f_coarse, f"coarse-{i}", "level1"))
+    if sharded(2):
+        servers.append(server(2, f_fine, "fine-pool", "level2"))
+    else:
+        for i in range(max(w.servers_per_level.get(2, 1), 1)):
+            servers.append(server(2, f_fine, f"fine-{i}", "level2"))
     return servers

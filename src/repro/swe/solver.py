@@ -181,6 +181,11 @@ class AOTBatchCache:
     replicates member 0 (use when zeros are not a valid input).  Calling
     returns ``(result_pytree, n)`` with the *padded* leading axis; the
     caller slices back to ``n``.
+
+    ``stacked`` may be any pytree whose leaves all carry the batch as
+    their leading axis (e.g. a device-resident ensemble state) —
+    ``dtype=None`` then preserves each leaf's own dtype instead of casting
+    (RNG keys stay uint32, counters stay int32).
     """
 
     def __init__(
@@ -188,7 +193,7 @@ class AOTBatchCache:
         stacked_fn: Callable,
         *,
         key: Tuple,
-        dtype,
+        dtype=None,
         donate: bool = False,
         pad: str = "zeros",
     ) -> None:
@@ -201,31 +206,48 @@ class AOTBatchCache:
         self.pad = pad
         self.executables: dict = {}
 
-    def __call__(self, stacked: jax.Array):
-        arg = stacked
-        stacked = jnp.asarray(stacked, self.dtype)
-        if self.donate and stacked is arg:
-            stacked = jnp.array(stacked, copy=True)
-        n = stacked.shape[0]
+    def __call__(self, stacked):
+        orig, treedef = jax.tree_util.tree_flatten(stacked)
+        leaves = [
+            jnp.asarray(x) if self.dtype is None else jnp.asarray(x, self.dtype)
+            for x in orig
+        ]
+        if self.donate:
+            # Donation deletes the input buffer: stage a private copy when
+            # the caller handed us a live jax array we would otherwise kill.
+            leaves = [
+                jnp.array(x, copy=True) if x is a else x
+                for x, a in zip(leaves, orig)
+            ]
+        n = leaves[0].shape[0]
         n_pad = pow2_batch(n)
         key = (*self.key, n_pad)
         exe = self.executables.get(key)
         if exe is None:
-            spec = jax.ShapeDtypeStruct((n_pad, *stacked.shape[1:]), self.dtype)
+            specs = treedef.unflatten(
+                [
+                    jax.ShapeDtypeStruct((n_pad, *x.shape[1:]), x.dtype)
+                    for x in leaves
+                ]
+            )
             jitted = jax.jit(
                 self.stacked_fn, donate_argnums=(0,) if self.donate else ()
             )
-            exe = jitted.lower(spec).compile()
+            exe = jitted.lower(specs).compile()
             self.executables[key] = exe
         if n_pad != n:
-            shape = (n_pad - n, *stacked.shape[1:])
-            fill = (
-                jnp.zeros(shape, self.dtype)
-                if self.pad == "zeros"
-                else jnp.broadcast_to(stacked[:1], shape)
-            )
-            stacked = jnp.concatenate([stacked, fill])
-        return exe(stacked), n
+
+            def fill(x):
+                shape = (n_pad - n, *x.shape[1:])
+                pad = (
+                    jnp.zeros(shape, x.dtype)
+                    if self.pad == "zeros"
+                    else jnp.broadcast_to(x[:1], shape)
+                )
+                return jnp.concatenate([x, pad])
+
+            leaves = [fill(x) for x in leaves]
+        return exe(treedef.unflatten(leaves)), n
 
 
 def make_solver(

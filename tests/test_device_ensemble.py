@@ -1,0 +1,202 @@
+"""Device-resident ensemble: fp32 bit-identity vs the Python step machine.
+
+The fused ``(C,)``-vmapped kernel (``repro.core.mlda_jax.DeviceEnsemble``)
+claims bitwise-equal fp32 chains to C independent ``MLDASampler`` machines
+driven by ``CounterStream`` (the kernel's counter-mode RNG re-exposed as a
+host Generator) + ``DeviceMatchedRandomWalk`` (the kernel's fp32 proposal
+arithmetic reproduced on host).  These tests hold that claim — thetas AND
+per-level (accepted, proposed, evals) counts — for 1-, 2- and 3-level
+hierarchies, across chunked-advance host syncs, through the runner, and
+for the coupled mode where the fine level lives behind a real balancer.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.balancer import Server
+from repro.core import (
+    CounterStream,
+    DeviceMatchedRandomWalk,
+    GaussianRandomWalk,
+    MLDASampler,
+    balanced_mlda,
+    make_device_ensemble,
+)
+from repro.ensemble import DeviceEnsembleRunner
+
+
+def lp0(t):
+    return -0.7 * jnp.sum((t - 0.3) ** 2)
+
+
+def lp1(t):
+    return -0.5 * jnp.sum(t * t)
+
+
+def lp2(t):
+    return -0.45 * jnp.sum((t - 0.1) ** 2)
+
+
+THETA0 = np.linspace(-1.0, 1.0, 6, dtype=np.float32).reshape(3, 2)
+
+
+def host(lp):
+    """Float-valued host twin evaluating at the kernel's fp32 inputs."""
+    return lambda t: float(lp(jnp.asarray(np.asarray(t, np.float32))))
+
+
+def bits(x):
+    return np.asarray(x, np.float32).view(np.uint32)
+
+
+def counts_of(stats):
+    return [(r.n_accepted, r.n_proposed, r.n_evals) for r in stats.levels]
+
+
+def host_chains(densities, subchains, scale, theta0, n, seed):
+    keys = jax.random.split(jax.random.key(seed), theta0.shape[0])
+    chains, counts = [], []
+    for c in range(theta0.shape[0]):
+        samp = MLDASampler(
+            [host(lp) for lp in densities],
+            DeviceMatchedRandomWalk(scale),
+            list(subchains),
+        )
+        chain = samp.sample(theta0[c], n, CounterStream(keys[c]))
+        chains.append(np.asarray(chain, np.float32))
+        counts.append(counts_of(samp))
+    return np.stack(chains), counts
+
+
+def fused_chains(densities, subchains, scale, theta0, n, seed, chunk=None):
+    ens = make_device_ensemble(
+        densities, list(subchains), scale, cache_key=("test-fused",)
+    )
+    state = ens.init(theta0, seed=seed)
+    if chunk is None:
+        state, thetas, _ = ens.advance(state, n)
+        out = np.asarray(thetas)
+    else:
+        blocks, drawn = [], 0
+        while drawn < n:
+            k = min(chunk, n - drawn)
+            state, thetas, _ = ens.advance(state, k)
+            blocks.append(np.asarray(thetas))
+            drawn += k
+        out = np.concatenate(blocks, axis=1)
+    counts = np.asarray(state.counts)
+    return out, [
+        [tuple(int(v) for v in counts[c, lvl]) for lvl in range(counts.shape[1])]
+        for c in range(counts.shape[0])
+    ]
+
+
+@pytest.mark.parametrize(
+    "densities,subchains",
+    [
+        ([lp1], []),
+        ([lp0, lp1], [3]),
+        ([lp0, lp2, lp1], [3, 2]),
+    ],
+    ids=["one-level", "two-level", "three-level"],
+)
+def test_fused_bit_identity(densities, subchains):
+    dev, dev_counts = fused_chains(densities, subchains, 0.8, THETA0, 25, seed=7)
+    ref, ref_counts = host_chains(densities, subchains, 0.8, THETA0, 25, seed=7)
+    assert np.array_equal(bits(dev), bits(ref))
+    assert dev_counts == ref_counts
+
+
+def test_chunked_advance_matches_single_launch():
+    """Host syncs between chunks must not perturb the stream: resuming from
+    a carried EnsembleState is the same chain as one big launch."""
+    one, one_counts = fused_chains([lp0, lp1], [3], 0.8, THETA0, 24, seed=3)
+    chunked, chunked_counts = fused_chains(
+        [lp0, lp1], [3], 0.8, THETA0, 24, seed=3, chunk=5
+    )
+    assert np.array_equal(bits(one), bits(chunked))
+    assert one_counts == chunked_counts
+
+
+def test_runner_fused_mode_counts_and_chains():
+    ens = make_device_ensemble([lp0, lp1], [3], 0.8, cache_key=("test-runner",))
+    runner = DeviceEnsembleRunner(ens, seed=7, chunk=4)
+    res = runner.run(THETA0, 25)
+    ref, ref_counts = host_chains([lp0, lp1], [3], 0.8, THETA0, 25, seed=7)
+    assert np.array_equal(bits(res.chains), bits(ref))
+    for c in range(THETA0.shape[0]):
+        assert counts_of(res.samplers[c]) == ref_counts[c]
+    assert res.summary()["n_chains"] == THETA0.shape[0]
+
+
+def test_runner_rejects_per_chain_callable_theta0():
+    ens = make_device_ensemble([lp1], [], 0.8, cache_key=("test-callable",))
+    runner = DeviceEnsembleRunner(ens)
+    with pytest.raises(TypeError):
+        runner.run(lambda c, rng: np.zeros(2), 3)
+
+
+def test_coupled_through_balancer_bit_identity():
+    """Fine level behind a real balancer Server: propose on device, solve
+    through the pool, accept on device — still bit-identical, and the
+    runner's LevelRecord totals match the step machine's."""
+
+    def fwd(theta):
+        return np.asarray(theta, np.float32)
+
+    def log_lik(obs):
+        return -0.5 * float(np.sum((np.asarray(obs) - 0.5) ** 2))
+
+    def log_prior(t):
+        return 0.0
+
+    runner, bal = balanced_mlda(
+        [Server(fwd, name="s0")],
+        log_lik,
+        log_prior,
+        GaussianRandomWalk(scale=0.8),
+        [3],
+        device_resident=True,
+        device_densities=[lp0],
+        ensemble_seed=0,
+    )
+    theta0 = np.asarray([[0.1, -0.2], [0.4, 0.0]], np.float32)
+    try:
+        res = runner.run(theta0, 20)
+    finally:
+        bal.shutdown()
+
+    def fine(t):
+        return log_prior(t) + log_lik(fwd(np.asarray(t, np.float32)))
+
+    keys = jax.random.split(jax.random.key(0), 2)
+    for c in range(2):
+        samp = MLDASampler([host(lp0), fine], DeviceMatchedRandomWalk(0.8), [3])
+        chain = samp.sample(theta0[c], 20, CounterStream(keys[c]))
+        assert np.array_equal(bits(chain), bits(res.chains[c]))
+        assert counts_of(samp) == counts_of(res.samplers[c])
+
+
+def test_balanced_mlda_device_arg_validation():
+    servers = [Server(lambda t: t, name="s0")]
+    with pytest.raises(ValueError):  # missing device densities
+        balanced_mlda(
+            servers,
+            lambda o: 0.0,
+            lambda t: 0.0,
+            GaussianRandomWalk(0.5),
+            [3],
+            device_resident=True,
+        )
+    with pytest.raises(ValueError):  # speculation is a step-machine feature
+        balanced_mlda(
+            servers,
+            lambda o: 0.0,
+            lambda t: 0.0,
+            GaussianRandomWalk(0.5),
+            [3],
+            device_resident=True,
+            device_densities=[lp0],
+            speculative=True,
+        )

@@ -1,0 +1,145 @@
+"""ShardedBatchServer vs BatchServer: same results, same error scatter.
+
+The sharded pool must be a drop-in replacement for a plain batch server:
+bitwise-equal results (both sides run through the same AOT jit path —
+eager-vs-jit FMA contraction would otherwise differ by 1 ulp), identical
+per-member ``check_finite`` failure scatter, and graceful fallback to an
+unsharded call when the pow2-padded batch does not divide the mesh.
+
+CI runs this file twice: once on the default single-device CPU backend
+(tier-1) and once with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+in a separate process (XLA_FLAGS is read at jax init, so the forced mesh
+cannot be set from inside an already-running suite).  The 8-device-only
+assertions gate themselves on ``len(jax.devices())``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.balancer import BatchServer, ShardedBatchServer
+from repro.runtime.sharding import data_mesh, data_policy
+from repro.swe.solver import AOTBatchCache
+
+
+def stacked_fn(stacked):
+    """(B, 3) -> (B, 2): includes a transcendental so fast-math or
+    recomputation differences would show up in the bits."""
+    q = jnp.sum(stacked * stacked, axis=-1)
+    return jnp.stack([q, jnp.exp(-0.5 * q)], axis=-1)
+
+
+def aot_matched_plain(fn, name):
+    """A BatchServer whose handler runs through the same AOTBatchCache jit
+    path as the sharded pool — the fair bitwise baseline."""
+    aot = AOTBatchCache(fn, key=("test-plain", name), dtype=None, pad="repeat")
+
+    def run(stacked):
+        out, n = aot(stacked)
+        return jax.tree.map(lambda x: np.asarray(x)[:n], out)
+
+    return BatchServer(run, name=f"plain-{name}")
+
+
+@pytest.mark.parametrize("batch", [1, 3, 8, 11, 16, 64])
+def test_sharded_matches_plain_bitwise(batch):
+    policy = data_policy()
+    sharded = ShardedBatchServer(
+        stacked_fn, policy, name="pool", cache_key=("test", batch)
+    )
+    plain = aot_matched_plain(stacked_fn, f"b{batch}")
+    rng = np.random.default_rng(batch)
+    thetas = [rng.normal(size=3).astype(np.float32) for _ in range(batch)]
+    got = sharded.batch_call(thetas)
+    want = plain.batch_call(thetas)
+    assert len(got) == len(want) == batch
+    for g, w in zip(got, want):
+        assert np.array_equal(
+            np.asarray(g).view(np.uint32), np.asarray(w).view(np.uint32)
+        )
+
+
+def test_indivisible_batch_falls_back_unsharded():
+    """B=3 pads to 4; on an 8-device mesh 4 < |mesh| so batch_axes is None
+    and the pool must take the unsharded path — correctness either way."""
+    policy = data_policy()
+    n_dev = len(jax.devices())
+    if n_dev >= 8:
+        assert policy.batch_axes(4) is None
+        assert policy.batch_axes(8) is not None
+        assert policy.batch_axes(64) is not None
+    sharded = ShardedBatchServer(
+        stacked_fn, policy, name="pad-pool", cache_key=("test", "pad")
+    )
+    thetas = [np.full(3, 0.25 * (i + 1), np.float32) for i in range(3)]
+    got = sharded.batch_call(thetas)
+    want = aot_matched_plain(stacked_fn, "pad").batch_call(thetas)
+    for g, w in zip(got, want):
+        assert np.array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_forced_mesh_spans_devices():
+    """When the 8-device mesh is forced, the policy really shards over it."""
+    if len(jax.devices()) < 8:
+        pytest.skip("single-device backend; forced-mesh CI step covers this")
+    mesh = data_mesh(8)
+    assert mesh.devices.size == 8
+    policy = data_policy(mesh)
+    assert policy.batch_axes(16) == tuple(mesh.axis_names)
+
+
+def test_check_finite_scatters_per_member():
+    """One poisoned member fails alone; batch mates still get results."""
+    policy = data_policy()
+    sharded = ShardedBatchServer(
+        stacked_fn,
+        policy,
+        name="nan-pool",
+        check_finite=True,
+        cache_key=("test", "nan"),
+    )
+    thetas = [np.ones(3, np.float32) * 0.1 for _ in range(8)]
+    thetas[5] = np.array([np.nan, 0.0, 0.0], np.float32)
+    results = sharded.batch_call(thetas)
+    assert isinstance(results[5], FloatingPointError)
+    for i, r in enumerate(results):
+        if i != 5:
+            assert np.all(np.isfinite(np.asarray(r)))
+
+
+def test_make_level_servers_wires_one_sharded_pool():
+    """With a policy + stacked forwards, a level gets ONE sharded pool
+    instead of ``servers_per_level`` BatchServer replicas."""
+    import dataclasses
+
+    from repro.configs.tohoku_mlda import CPU
+    from repro.swe import make_level_servers
+
+    w = dataclasses.replace(CPU, batch_solves=True)
+
+    def gp(t):
+        return jnp.sum(t)
+
+    gp.batch_call = stacked_fn
+    servers = make_level_servers(
+        w,
+        gp,
+        stacked_fn,
+        stacked_fn,
+        stacked_forwards=(None, stacked_fn, stacked_fn),
+        policy=data_policy(),
+    )
+    pools = [s for s in servers if isinstance(s, ShardedBatchServer)]
+    assert sorted(p.name for p in pools) == ["coarse-pool", "fine-pool", "gp-0"]
+    assert {next(iter(p.capacity_tags)) for p in pools} == {
+        "level0",
+        "level1",
+        "level2",
+    }
+    assert len(servers) == 3  # replicas replaced by one pool per level
+
+    # Setting the config's mesh_devices knob alone (no explicit policy)
+    # derives the mesh in make_level_servers — the GP pool shards.
+    w_mesh = dataclasses.replace(CPU, batch_solves=True, mesh_devices=1)
+    servers = make_level_servers(w_mesh, gp, stacked_fn, stacked_fn)
+    assert isinstance(servers[0], ShardedBatchServer)
