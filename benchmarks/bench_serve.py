@@ -1,0 +1,176 @@
+"""Continuous-batching LM serving benchmark (DESIGN.md §10).
+
+Runs the SAME open-loop workload — heterogeneous generation lengths
+1/4/16/64 with probabilities .4/.3/.2/.1, the LM analogue of the paper's
+MLDA level-runtime spread — through both serving modes of
+:class:`repro.runtime.serve_loop.ServingEngine`:
+
+* ``generation``: the baseline where one request monopolizes a server
+  per generation (the pre-PR serving path);
+* ``continuous``: prefill/decode disaggregation + :class:`DecodePool`
+  slot batching, where requests join the in-flight batch at token
+  boundaries.
+
+Greedy tokens are asserted bit-identical between the modes (continuous
+batching changes scheduling, never results), then tokens/s, TTFT and
+per-token latency quantiles plus slot occupancy are recorded to
+``benchmarks/BENCH_serve.json``.
+
+``--smoke`` runs the CI-sized workload and exits non-zero unless
+continuous mode reaches ``--min-tokens-ratio`` (default 2x) the
+baseline's tokens/s.  The win is scheduling, not math: the pool amortises
+one fused step across every in-flight generation while the baseline pays
+a full device round trip per request per token, so the gate holds on the
+2-core CI box.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.runtime.serve_loop import ServingEngine, serving_metrics
+
+N_NEW_MIX: Tuple[Tuple[int, ...], Tuple[float, ...]] = (
+    (1, 4, 16, 64),
+    (0.4, 0.3, 0.2, 0.1),
+)
+
+
+def sample_workload(
+    variants: Dict[str, object], n_requests: int, prompt_len: int, seed: int
+) -> List[Tuple[str, np.ndarray, int]]:
+    """(variant, prompt, n_new) triples — identical across modes by seed."""
+    rng = np.random.default_rng(seed)
+    names = list(variants)
+    lengths, probs = N_NEW_MIX
+    work = []
+    for _ in range(n_requests):
+        vname = names[int(rng.integers(len(names)))]
+        n_new = int(rng.choice(lengths, p=list(probs)))
+        prompt = rng.integers(0, variants[vname].vocab, size=(1, prompt_len))
+        work.append((vname, prompt, n_new))
+    return work
+
+
+def run_mode(
+    mode: str,
+    variants: Dict[str, object],
+    work: List[Tuple[str, np.ndarray, int]],
+    *,
+    n_slots: int,
+    cache_len: int,
+    n_replicas: int,
+) -> Tuple[dict, List[np.ndarray]]:
+    with ServingEngine(
+        variants,
+        mode=mode,
+        n_replicas=n_replicas,
+        n_slots=n_slots,
+        cache_len=cache_len,
+    ) as engine:
+        # Warm every variant's executables (prefill + decode at full
+        # length) so the measured window is steady-state serving.
+        for vname in variants:
+            engine.submit(vname, work[0][1], 2).result(timeout=600)
+        t0 = time.monotonic()
+        gens = [engine.submit(v, p, n) for v, p, n in work]
+        tokens = [g.result(timeout=600).tokens for g in gens]
+        wall = time.monotonic() - t0
+        metrics = serving_metrics(gens, wall, engine.summary())
+        metrics["stats_table"] = engine.stats_table()
+    return metrics, tokens
+
+
+def main(
+    smoke: bool = False,
+    min_tokens_ratio: float = 2.0,
+    arch_names: Optional[List[str]] = None,
+    seed: int = 0,
+):
+    names = arch_names or (["qwen2-0.5b"] if smoke else ["qwen2-0.5b", "mamba2-1.3b"])
+    variants = {n: ARCHS[n].reduced() for n in names}
+    n_requests = 24 if smoke else 64
+    work = sample_workload(variants, n_requests, prompt_len=4, seed=seed)
+
+    modes: Dict[str, dict] = {}
+    all_tokens: Dict[str, List[np.ndarray]] = {}
+    for mode in ("generation", "continuous"):
+        metrics, tokens = run_mode(
+            mode, variants, work,
+            n_slots=8, cache_len=96, n_replicas=1,
+        )
+        modes[mode] = metrics
+        all_tokens[mode] = tokens
+
+    # Continuous batching must change scheduling only, never the tokens.
+    mismatches = sum(
+        not np.array_equal(a, b)
+        for a, b in zip(all_tokens["generation"], all_tokens["continuous"])
+    )
+    ratio = modes["continuous"]["tokens_per_s"] / modes["generation"]["tokens_per_s"]
+
+    rows = []
+    for mode, m in modes.items():
+        rows.append(f"serve_{mode}_tokens_per_s,{m['tokens_per_s']:.1f},tokens/s")
+        rows.append(f"serve_{mode}_ttft_mean,{m['ttft_mean_s'] * 1e3:.2f},ms")
+        rows.append(f"serve_{mode}_per_token_p50,{m['per_token_p50_s'] * 1e3:.3f},ms")
+        rows.append(f"serve_{mode}_per_token_p99,{m['per_token_p99_s'] * 1e3:.3f},ms")
+    for name, occ in modes["continuous"].get("slot_occupancy", {}).items():
+        rows.append(f"serve_occupancy_{name},{occ:.3f},frac")
+    rows.append(f"serve_tokens_ratio,{ratio:.2f},x")
+    rows.append(f"serve_token_mismatches,{mismatches},requests")
+
+    payload = {
+        "workload": {
+            "kind": "smoke" if smoke else "full",
+            "variants": names,
+            "n_requests": n_requests,
+            "n_new_mix": {"lengths": list(N_NEW_MIX[0]), "probs": list(N_NEW_MIX[1])},
+            "seed": seed,
+        },
+        "modes": modes,
+        "gate": {
+            "metric": "continuous / generation tokens_per_s",
+            "min_tokens_ratio": min_tokens_ratio,
+            "ratio": ratio,
+            "token_mismatches": mismatches,
+            "pass": ratio >= min_tokens_ratio and mismatches == 0,
+        },
+    }
+    out_path = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    rows.append(f"serve_bench_json,{out_path},path")
+    return rows, payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run; fails unless continuous mode "
+                         "reaches --min-tokens-ratio x the generation-"
+                         "granularity baseline's tokens/s")
+    ap.add_argument("--min-tokens-ratio", type=float, default=2.0)
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    rows, payload = main(
+        smoke=args.smoke,
+        min_tokens_ratio=args.min_tokens_ratio,
+        arch_names=args.arch,
+        seed=args.seed,
+    )
+    for row in rows:
+        print(row)
+    if args.smoke and not payload["gate"]["pass"]:
+        raise SystemExit(
+            f"serve gate failed: ratio {payload['gate']['ratio']:.2f}x "
+            f"(need >= {payload['gate']['min_tokens_ratio']}x), "
+            f"{payload['gate']['token_mismatches']} token mismatches"
+        )

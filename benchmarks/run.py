@@ -9,6 +9,7 @@ Prints ``name,value,unit`` CSV rows:
   * bench_batch     -> batched forward-solve engine (coalesced dispatch)
   * bench_kernels   -> kernel micro-bench (CPU wall; TPU story in §Roofline)
   * bench_gp        -> GP surrogate accuracy/fit time (paper §6.1)
+  * bench_serve     -> continuous-batching LM serving vs generation baseline
   * roofline        -> per-cell roofline fractions from the dry-run JSONs
 """
 from __future__ import annotations
@@ -25,7 +26,7 @@ def main() -> None:
     ap.add_argument(
         "--only", default="",
         help="comma-separated subset "
-             "(balancer,dispatch,mlda,batch,kernels,gp,roofline)"
+             "(balancer,dispatch,mlda,batch,kernels,gp,serve,roofline)"
     )
     args = ap.parse_args()
 
@@ -36,6 +37,7 @@ def main() -> None:
         bench_gp,
         bench_kernels,
         bench_mlda,
+        bench_serve,
         roofline,
     )
 
@@ -46,6 +48,7 @@ def main() -> None:
         "gp": bench_gp.main,
         "mlda": bench_mlda.main,
         "batch": lambda: bench_batch.main(smoke=True)[0],
+        "serve": lambda: bench_serve.main(smoke=True)[0],
         "roofline": roofline.main,
     }
     if args.fast:

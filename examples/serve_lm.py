@@ -1,6 +1,7 @@
-"""Serve a small LM with the paper's load balancer dispatching batched
-requests of heterogeneous generation lengths (DESIGN.md §4: the balancer is
-model-agnostic — here its 'model hierarchy' is short vs long generations).
+"""Serve a small LM with the paper's load balancer dispatching requests of
+heterogeneous generation lengths (DESIGN.md §10: prefill/decode
+disaggregation + continuous batching — the balancer is model-agnostic;
+here its 'model hierarchy' is short vs long generations).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -14,7 +15,7 @@ if __name__ == "__main__":
                 sys.executable, "-m", "repro.launch.serve",
                 "--arch", "qwen2-0.5b",
                 "--requests", "24",
-                "--servers", "2",
+                "--slots", "8",
             ]
         )
     )

@@ -40,6 +40,10 @@ from .queueing import FreeServerIndex, IndexedQueue
 from .telemetry import P2Quantile, Telemetry
 from .types import (
     BatchServer,
+    DecodeHandoff,
+    DecodePool,
+    DecodeResult,
+    DecodeSlot,
     Request,
     Server,
     ServerDiedError,
@@ -50,6 +54,10 @@ from .types import (
 __all__ = [
     "BatchServer",
     "CostAwarePolicy",
+    "DecodeHandoff",
+    "DecodePool",
+    "DecodeResult",
+    "DecodeSlot",
     "FifoPolicy",
     "FreeServerIndex",
     "IndexedQueue",

@@ -487,6 +487,8 @@ class LoadBalancer:
     ) -> Optional[Tuple[Request, Server]]:
         req.dispatched_at = time.monotonic()
         req.server = server.name
+        if server.continuous:
+            return self._execute_continuous(req, server)
         if req.batchable and server.batch_fn is not None and self.batch_window_s > 0:
             return self._execute_batched(req, server)
         try:
@@ -704,6 +706,108 @@ class LoadBalancer:
             r._complete()
         return nxt
 
+    # -- continuous batching (token-boundary joins; beyond paper) ------------
+    def _execute_continuous(
+        self, req: Request, server: Server
+    ) -> Optional[Tuple[Request, Server]]:
+        """Drive a :class:`~repro.balancer.types.DecodePool` until its slot
+        table drains — the continuous-batching dispatch edge.
+
+        Where ``_execute_batched`` coalesces a *window* of requests into
+        one stacked call, this edge keeps the server's in-flight batch
+        open: after every fused decode step (a token boundary) it drains
+        queued same-tag requests straight into the freed slots, so a
+        1-token request admitted behind a 64-token one rides the same
+        executable instead of waiting out the whole generation.  The pool
+        stays ``busy`` (one worker drives it) from the first admission
+        until the last slot evicts; queued requests therefore reach it
+        only through the boundary join — or through a *free* replica via
+        the normal dispatch path, whichever comes first.
+
+        Failure semantics differ from the batched edge in one way: a
+        step/insert fault kills the pool AND fails every in-flight
+        request *without retries* — their decode state died with the
+        pool's slot table and a replay would silently drop the tokens
+        already emitted.  Shutdown stops admission at the next boundary;
+        in-flight slots finish (the shutdown contract: in-flight requests
+        complete, queued ones error).
+        """
+        try:
+            done = server.admit(req, req.dispatched_at)
+            if done is not None:
+                self._complete_slot(done, server)
+            while server.n_occupied:
+                # Token-boundary join: fill freed slots from the queue
+                # BEFORE stepping, so requests queued behind the first
+                # admission ride the very next fused step.
+                self._admit_queued(server, req.tag)
+                finished, n_emitted = server.step_once()
+                self._telemetry.record_tokens(req.tag, n_emitted)
+                self._telemetry.record_occupancy(
+                    server.name, n_emitted, server.n_slots
+                )
+                for info in finished:
+                    self._complete_slot(info, server)
+        except Exception:  # noqa: BLE001 - pool fault kills the pool
+            self._fail_pool(server)
+            return None
+        return self._free_server(server)
+
+    def _admit_queued(self, server: Server, tag: str) -> None:
+        """Drain up to ``server.n_free`` queued ``tag`` requests into free
+        slots, in arrival order (FIFO admission).  No-op under shutdown —
+        queued requests are failed by the shutdown sweep instead."""
+        free = server.n_free
+        if free <= 0:
+            return
+        with self._cv:
+            if self._shutdown:
+                return
+            extra = self._queue.drain_tag_limit(tag, free)
+        if not extra:
+            return
+        now = time.monotonic()
+        for r in extra:
+            r.dispatched_at = now
+            r.server = server.name
+            done = server.admit(r, now)
+            if done is not None:
+                self._complete_slot(done, server)
+
+    def _complete_slot(self, info, server: Server) -> None:
+        """Book and complete one finished slot's request."""
+        r = info.req
+        r.completed_at = info.times[-1]
+        r.result = info.result()
+        # Per-request completion booking: the busy interval is this
+        # request's dispatch->finish span, so a pool's uptime() reads as
+        # *slot-seconds* (overlapping intervals — deliberately: that is
+        # the utilization a slot-based server actually delivers), and the
+        # tag EWMA feeds cost_aware routing across replicas.
+        self._telemetry.record_completion(r, server)
+        r._complete()
+
+    def _fail_pool(self, server: Server) -> None:
+        """A DecodePool's step/insert raised: kill the pool, fail every
+        in-flight slot request (no retry — their KV state is gone)."""
+        self._telemetry.record_failure(server)
+        infos = server.clear()
+        with self._cv:
+            server.dead = True
+            server.busy = False
+            self._free.mark_dead(server)
+            self._unservable_dirty = True
+            self._cv.notify()
+        with self._work_cv:  # a death shrinks the pool like a retire
+            self._work_cv.notify_all()
+        now = time.monotonic()
+        for info in infos:
+            info.req.completed_at = now
+            info.req.error = ServerDiedError(
+                f"decode pool '{server.name}' died; in-flight decode state lost"
+            )
+            info.req._complete()
+
     # -- straggler hedging (beyond paper) ------------------------------------
     def runtime_quantile(self, tag: str, q: float) -> Optional[float]:
         return self._telemetry.runtime_quantile(tag, q)
@@ -763,6 +867,10 @@ class LoadBalancer:
 
     def summary(self) -> Dict[str, Any]:
         return self._telemetry.summary(self._servers)
+
+    def stats_table(self) -> List[Dict[str, Any]]:
+        """Per-tag serving rows (completions, EWMA service time, tokens)."""
+        return self._telemetry.stats_table()
 
     # -- checkpointing (paper §7 future work) --------------------------------
     def checkpoint_queue(self) -> List[Dict[str, Any]]:

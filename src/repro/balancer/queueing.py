@@ -125,6 +125,20 @@ class IndexedQueue:
             self._forget(r)
         return taken
 
+    def drain_tag_limit(self, tag: str, limit: int) -> List[Request]:
+        """Pop up to ``limit`` requests of ``tag`` in arrival order,
+        batchable or not (the continuous-batching token-boundary join:
+        every queued request of a decode tag is a slot candidate)."""
+        dq = self._by_tag.get(tag)
+        if not dq or limit <= 0:
+            return []
+        taken: List[Request] = []
+        while dq and len(taken) < limit:
+            taken.append(dq.popleft())
+        for r in taken:
+            self._forget(r)
+        return taken
+
     def drain_all(self) -> List[Request]:
         """Remove and return every queued request in arrival order."""
         out = list(self)

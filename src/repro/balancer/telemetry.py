@@ -149,6 +149,11 @@ class Telemetry:
         self._server_tag_ewma: Dict[tuple, float] = {}
         self._server_busy_s: Dict[str, float] = {}
         self._batch_hist: Dict[str, Dict[int, int]] = {}
+        # serving counters: generated tokens per tag, completions per tag,
+        # and per-server slot occupancy (continuous-batching DecodePools)
+        self._tag_tokens: Dict[str, int] = {}
+        self._tag_done: Dict[str, int] = {}
+        self._occupancy: Dict[str, Dict[str, float]] = {}
         self._ewma_alpha = ewma_alpha
         # streaming idle-time aggregates (exact mode derives from _history)
         self._idle_n = 0
@@ -220,10 +225,26 @@ class Telemetry:
                     self._server_busy_s.get(b.name, 0.0) + dt
                 )
                 self._record_runtime_locked(a.tag, dt, b.name)
+                self._tag_done[a.tag] = self._tag_done.get(a.tag, 0) + 1
                 self._book_idle_locked(a)
             elif kind == "batched":
                 for r in a:
                     self._book_idle_locked(r)
+            elif kind == "tokens":
+                self._tag_tokens[a] = self._tag_tokens.get(a, 0) + b
+            elif kind == "occupancy":
+                occupied, capacity = b
+                occ = self._occupancy.get(a)
+                if occ is None:
+                    occ = self._occupancy[a] = {
+                        "steps": 0, "slot_steps": 0.0, "capacity": float(capacity),
+                        "ewma": occupied / capacity,
+                    }
+                occ["steps"] += 1
+                occ["slot_steps"] += occupied
+                occ["capacity"] = float(capacity)
+                al = self._ewma_alpha
+                occ["ewma"] = (1 - al) * occ["ewma"] + al * (occupied / capacity)
             else:  # "batch_size"
                 hist = self._batch_hist.setdefault(a, {})
                 hist[b] = hist.get(b, 0) + 1
@@ -272,6 +293,21 @@ class Telemetry:
         signal, not noise.
         """
         self._pending.append(("batch_size", tag, size))
+        self._maybe_fold()
+
+    def record_tokens(self, tag: str, n: int) -> None:
+        """Book ``n`` generated tokens against ``tag`` (serving workloads:
+        the tokens/s numerator, alongside the paper's idle-time columns)."""
+        if n:
+            self._pending.append(("tokens", tag, n))
+            self._maybe_fold()
+
+    def record_occupancy(self, server: str, occupied: int, capacity: int) -> None:
+        """Book one decode step's slot occupancy for a continuous-batching
+        pool: ``occupied`` of ``capacity`` slots emitted a token.  Folded
+        into a per-server EWMA + running mean — the 'how full does the
+        fused step run' metric BENCH_serve.json reports."""
+        self._pending.append(("occupancy", server, (occupied, capacity)))
         self._maybe_fold()
 
     def record_failure(self, server: Server) -> None:
@@ -399,4 +435,36 @@ class Telemetry:
             stats["batch_histogram"] = {
                 t: dict(h) for t, h in self._batch_hist.items()
             }
+            stats["tag_tokens"] = dict(self._tag_tokens)
+            stats["slot_occupancy"] = {
+                name: {
+                    "mean": occ["slot_steps"] / (occ["steps"] * occ["capacity"])
+                    if occ["steps"]
+                    else 0.0,
+                    "ewma": occ["ewma"],
+                    "steps": occ["steps"],
+                    "capacity": int(occ["capacity"]),
+                }
+                for name, occ in self._occupancy.items()
+            }
         return stats
+
+    def stats_table(self) -> List[Dict[str, Any]]:
+        """Per-tag serving/runtime rows for human-readable reports.
+
+        One row per tag ever completed: request count, EWMA service time,
+        and the generated-token counter (0 for non-serving tags) — the
+        serve driver prints this next to the paper's idle-time columns.
+        """
+        with self._lock:
+            self._fold_locked()
+            tags = sorted(set(self._tag_done) | set(self._tag_tokens))
+            return [
+                {
+                    "tag": tag,
+                    "n_done": self._tag_done.get(tag, 0),
+                    "ewma_s": self._tag_ewma.get(tag),
+                    "tokens": self._tag_tokens.get(tag, 0),
+                }
+                for tag in tags
+            ]

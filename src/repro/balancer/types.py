@@ -12,7 +12,7 @@ import itertools
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -61,6 +61,9 @@ class Server:
     """
 
     _ids = itertools.count()
+    # Continuous-batching servers (DecodePool) take the dispatcher's
+    # token-boundary dispatch edge instead of fn/batch_call.
+    continuous = False
 
     def __init__(
         self,
@@ -247,6 +250,221 @@ class ShardedBatchServer(BatchServer):
             )
         out, n = self._aot(stacked)
         return jax.tree.map(lambda x: np.asarray(x)[:n], out)
+
+
+class DecodeHandoff(NamedTuple):
+    """Prefill -> decode handoff: what a decode slot needs to continue.
+
+    ``state`` is the per-sequence decode state the prefill produced (an
+    opaque pytree — the pool's ``insert_fn`` understands it); ``token`` is
+    the first generated token (argmax of the prefill's last-position
+    logits), which seeds the slot's autoregressive feed; ``max_new`` is
+    the total generation budget *including* ``token``; ``eos`` stops the
+    slot early when the model emits it.
+    """
+
+    state: Any
+    token: int
+    max_new: int
+    eos: Optional[int] = None
+
+
+class DecodeResult(NamedTuple):
+    """What a :class:`DecodePool` request resolves to.
+
+    ``tokens`` holds the full greedy generation (``handoff.token`` first);
+    ``token_times`` has one clock stamp per token (the handoff token is
+    stamped at admission), from which time-to-first-token and per-token
+    latency quantiles are derived.
+    """
+
+    tokens: np.ndarray
+    token_times: List[float]
+
+
+@dataclass
+class DecodeSlot:
+    """Per-slot bookkeeping of one in-flight generation in a DecodePool."""
+
+    req: "Request"
+    slot: int
+    tokens: List[int]
+    times: List[float]
+    max_new: int
+    eos: Optional[int]
+
+    @property
+    def finished(self) -> bool:
+        return len(self.tokens) >= self.max_new or (
+            self.eos is not None and self.tokens[-1] == self.eos
+        )
+
+    def result(self) -> DecodeResult:
+        return DecodeResult(
+            tokens=np.asarray(self.tokens, dtype=np.int64),
+            token_times=list(self.times),
+        )
+
+
+class DecodePool(Server):
+    """A slot-based continuous-batching decode server.
+
+    Where :class:`BatchServer` coalesces a *window* of same-tag requests
+    into one stacked call, a DecodePool owns a persistent ``(n_slots,
+    ...)``-leading batched decode state and admits new requests into the
+    **in-flight** batch at token boundaries: insert on a free slot, evict
+    on EOS or length, so the compiled decode step always runs full-width
+    instead of waiting out a coalescing window.  This is the serving-stack
+    analogue of the paper's dynamic dispatch — generation lengths span
+    orders of magnitude exactly like the tsunami level hierarchy, and the
+    slot table is what keeps short generations from queueing behind long
+    ones.
+
+    The pool is model-agnostic; the model wiring supplies three callables
+    (see :func:`repro.runtime.serve_loop.make_decode_pool` for the LM
+    instantiation):
+
+    * ``step_fn(state, tokens) -> (state, next_tokens)`` — advance every
+      slot one token in ONE fused call.  ``tokens`` is an ``(n_slots,)``
+      int array (free slots carry a dummy feed whose output is ignored);
+      ``next_tokens`` is ``(n_slots,)``.
+    * ``insert_fn(state, slot, handoff_state) -> state`` — write one
+      sequence's prefill-produced decode state into ``slot``.
+    * ``init_state_fn() -> state`` — allocate the pooled state lazily on
+      first admission.
+    * ``evict_fn(state, slot) -> state`` (optional) — scrub an evicted
+      slot; stale rows are dispatch-masked either way, so this is for
+      hygiene, not correctness.
+
+    Requests routed here must carry a :class:`DecodeHandoff` theta.  The
+    dispatcher drives the slot lifecycle through :meth:`admit` /
+    :meth:`step_once` on its continuous dispatch edge
+    (``LoadBalancer._execute_continuous``); the pool itself holds only
+    host-side bookkeeping and is driven by exactly one worker at a time
+    (it is ``busy`` from first admission until the last slot drains).
+
+    ``clock`` injects a fake time source for deterministic tests.
+    """
+
+    continuous = True
+
+    def __init__(
+        self,
+        step_fn: Callable,
+        insert_fn: Callable,
+        init_state_fn: Callable,
+        n_slots: int,
+        *,
+        name: Optional[str] = None,
+        capacity_tags: Sequence[str] = (),
+        evict_fn: Optional[Callable] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ) -> None:
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        super().__init__(self._no_direct_call, name=name, capacity_tags=capacity_tags)
+        self.step_fn = step_fn
+        self.insert_fn = insert_fn
+        self.init_state_fn = init_state_fn
+        self.evict_fn = evict_fn
+        self.n_slots = n_slots
+        self.clock = clock
+        self._state: Any = None  # allocated lazily by the first admission
+        self._slots: List[Optional[DecodeSlot]] = [None] * n_slots
+        self._free_slots: List[int] = list(range(n_slots))
+        self._next_tokens = np.zeros(n_slots, dtype=np.int64)
+        # (slot, request) per admission, in admission order — the FIFO
+        # fairness test's observable.
+        self.admit_log: List[Tuple[int, "Request"]] = []
+
+    def _no_direct_call(self, theta) -> Any:  # pragma: no cover
+        raise RuntimeError(
+            f"DecodePool '{self.name}' is driven by the dispatcher's "
+            "continuous dispatch edge, not by direct fn calls"
+        )
+
+    # -- slot table reads ----------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def n_occupied(self) -> int:
+        return self.n_slots - len(self._free_slots)
+
+    # -- slot lifecycle (called by the dispatcher's continuous edge) ---------
+    def admit(self, req: "Request", now: float) -> Optional[DecodeSlot]:
+        """Insert ``req`` into the lowest free slot at a token boundary.
+
+        Returns the slot info if the request finished *at admission* (its
+        budget was a single token, already produced by prefill, or the
+        handoff token is EOS) — the caller completes it without the
+        request ever occupying device state.  Otherwise returns None and
+        the slot joins the in-flight batch at the next :meth:`step_once`.
+        """
+        handoff: DecodeHandoff = req.theta
+        slot = self._free_slots.pop(0)  # lowest index: deterministic layout
+        info = DecodeSlot(
+            req=req,
+            slot=slot,
+            tokens=[int(handoff.token)],
+            times=[now],
+            max_new=int(handoff.max_new),
+            eos=None if handoff.eos is None else int(handoff.eos),
+        )
+        self.admit_log.append((slot, req))
+        if info.finished:
+            self._free_slots.append(slot)
+            self._free_slots.sort()
+            return info
+        if self._state is None:
+            self._state = self.init_state_fn()
+        self._state = self.insert_fn(self._state, slot, handoff.state)
+        self._slots[slot] = info
+        self._next_tokens[slot] = info.tokens[-1]
+        return None
+
+    def step_once(self) -> Tuple[List[DecodeSlot], int]:
+        """Advance every occupied slot one token (ONE fused call).
+
+        Returns ``(finished slots, n_tokens_emitted)``.  Finished slots
+        (EOS or length budget) are evicted — their indices free up for the
+        next token-boundary join — and handed back for completion.
+        """
+        self._state, nxt = self.step_fn(self._state, self._next_tokens.copy())
+        nxt = np.asarray(nxt)
+        now = self.clock()
+        finished: List[DecodeSlot] = []
+        n_emitted = 0
+        for slot, info in enumerate(self._slots):
+            if info is None:
+                continue
+            tok = int(nxt[slot])
+            info.tokens.append(tok)
+            info.times.append(now)
+            n_emitted += 1
+            if info.finished:
+                self._slots[slot] = None
+                self._free_slots.append(slot)
+                if self.evict_fn is not None:
+                    self._state = self.evict_fn(self._state, slot)
+                finished.append(info)
+            else:
+                self._next_tokens[slot] = tok
+        if finished:
+            self._free_slots.sort()
+        return finished, n_emitted
+
+    def occupied_slots(self) -> List[DecodeSlot]:
+        """In-flight slot infos (used by the pool-death failure path)."""
+        return [info for info in self._slots if info is not None]
+
+    def clear(self) -> List[DecodeSlot]:
+        """Drop every in-flight slot (pool death): bookkeeping only."""
+        infos = self.occupied_slots()
+        self._slots = [None] * self.n_slots
+        self._free_slots = list(range(self.n_slots))
+        return infos
 
 
 @dataclass(eq=False)  # identity equality: dataclass field == would compare

@@ -18,7 +18,7 @@ wraps one chain's machine behind a ``step()`` API; the blocking
 :meth:`MLDASampler.sample` is a thin eager driver over it (bit-identical
 to the historical recursive implementation at fixed RNG), while
 :class:`repro.ensemble.EnsembleRunner` multiplexes many chains' machines
-through one shared :class:`repro.core.balancer.LoadBalancer` from a single
+through one shared :class:`repro.balancer.LoadBalancer` from a single
 thread.  With ``speculative=True`` the machine additionally prefetches the
 next coarse subchain while a fine solve is still on a server, rewinding
 RNG/bookkeeping on a wrong guess so chains stay bit-identical.

@@ -2,7 +2,7 @@
 
 One driver thread multiplexes N independent MLDA chains' step machines
 (:class:`repro.core.mlda.ChainState`) through a shared
-:class:`repro.core.balancer.LoadBalancer`: while one chain's fine solve is
+:class:`repro.balancer.LoadBalancer`: while one chain's fine solve is
 on a server, the other chains' coarse subchains keep the rest of the pool
 busy — the regime where the paper's millisecond idle times actually pay
 off (Seelinger et al., arXiv:2107.14552; Loi & Reinarz, arXiv:2503.22645).

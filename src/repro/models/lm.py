@@ -396,3 +396,65 @@ def prefill(
     """
     logits = forward(params, cfg, batch)
     return logits[:, -1:, :]
+
+
+def prefill_state(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jax.Array,  # (B, S) prompt
+    cache_len: int,
+) -> Tuple[jax.Array, DecodeState]:
+    """Fused prefill that also yields the decode state -> (logits, state).
+
+    One ``lax.scan`` of :func:`decode_step` over the prompt positions: a
+    single XLA call per prompt length (vs the old serving path's S
+    sequential device round-trips), bit-identical to that per-token loop
+    by construction, and — unlike :func:`prefill`/:func:`forward` — it
+    produces the recurrent/KV caches a decode slot continues from, which
+    the training-path forward cannot give for SSM families.  Returns the
+    last-position logits ``(B, 1, V)`` and the ready-to-decode state.
+    """
+    state = init_decode_state(cfg, tokens.shape[0], cache_len)
+
+    def body(st: DecodeState, tok: jax.Array):
+        logits, st = decode_step(params, cfg, st, tok[:, None])
+        return st, logits
+
+    state, logits = jax.lax.scan(body, state, tokens.T)  # scan over S
+    return logits[-1], state
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: pooled (slot-stacked) decode state
+# ---------------------------------------------------------------------------
+def pool_decode_state(cfg: ArchConfig, n_slots: int, cache_len: int) -> DecodeState:
+    """Slot-stacked decode state for a continuous-batching pool.
+
+    Every leaf of a per-sequence ``B=1`` :func:`init_decode_state` gains a
+    leading ``(n_slots,)`` axis — including the scalar ``pos``, which
+    becomes per-slot so sequences admitted at different token boundaries
+    decode at independent positions under one ``vmap``'d step.
+    """
+    one = init_decode_state(cfg, 1, cache_len)
+    return jax.tree.map(lambda x: jnp.repeat(x[None], n_slots, axis=0), one)
+
+
+def slot_insert(pool_state: DecodeState, seq_state: DecodeState, slot) -> DecodeState:
+    """Write one sequence's ``B=1`` decode state into pool slot ``slot``."""
+    return jax.tree.map(
+        lambda p, s: jax.lax.dynamic_update_index_in_dim(p, s.astype(p.dtype), slot, 0),
+        pool_state,
+        seq_state,
+    )
+
+
+def slot_evict(
+    pool_state: DecodeState, cfg: ArchConfig, cache_len: int, slot
+) -> DecodeState:
+    """Reset pool slot ``slot`` to the zero state.
+
+    Hygiene only: a freed slot's stale rows are never read (its feed token
+    is a dummy and its output is discarded until the next insert
+    overwrites the slot), so pools may skip eviction entirely.
+    """
+    return slot_insert(pool_state, init_decode_state(cfg, 1, cache_len), slot)

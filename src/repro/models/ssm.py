@@ -206,7 +206,12 @@ def mamba_decode_step(
     decay = jnp.exp(dt * A)  # (B,H)
     upd = dt[:, :, None, None] * (xh[:, :, :, None] * B[:, None, None, :].astype(jnp.float32))
     new_h = decay[:, :, None, None] * h_state + upd
-    y = jnp.einsum("bhpn,bn->bhp", new_h, C.astype(jnp.float32))
+    # Elementwise mul + reduce instead of einsum: the contraction is then
+    # batch-size-invariant (XLA picks a different dot strategy once a slot
+    # axis is vmapped on top), which keeps pooled continuous-batching decode
+    # bit-identical to single-sequence decode — same trick as the GP's
+    # posterior contraction (DESIGN.md §7.5).
+    y = (new_h * C.astype(jnp.float32)[:, None, None, :]).sum(-1)
     y = y + params["D"][None, :, None] * xh
     y = y.reshape(b, di).astype(x.dtype)
     y = rmsnorm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)

@@ -23,6 +23,11 @@ class ModelBundle:
     prefill: Callable  # (params, batch) -> last-position logits
     decode_init: Callable  # (params, batch, seq_len) -> state
     decode_step: Callable  # (params, state, tokens) -> (logits, state)
+    # (params, tokens (B, S), cache_len) -> (last logits (B, 1, V), state).
+    # Fused single-call prefill that ALSO yields the decode state (the
+    # continuous-batching prefill->decode handoff).  None for encdec, whose
+    # decode state comes from the encoder pass via decode_init.
+    prefill_state: Optional[Callable] = None
 
 
 def build_model(cfg: ArchConfig) -> ModelBundle:
@@ -44,6 +49,7 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
         prefill=lambda p, b: lm.prefill(p, cfg, b),
         decode_init=lambda p, b, s: lm.init_decode_state(cfg, _batch_size(b), s),
         decode_step=lambda p, st, t: lm.decode_step(p, cfg, st, t),
+        prefill_state=lambda p, t, s: lm.prefill_state(p, cfg, t, s),
     )
 
 

@@ -1,11 +1,38 @@
-"""Serve-step factories: prefill (full sequence) and decode (KV-cache step)."""
+"""Serve-step factories and the continuous-batching LM serving engine.
+
+Two layers live here:
+
+* ``shard_prefill_step`` / ``shard_decode_step`` — pjit'd per-cell entry
+  points for the dry-run matrix (unchanged).
+* :class:`ServingEngine` — the LM serving stack built on the balancer
+  (DESIGN.md §10): prefill/decode disaggregation as two tag families
+  (``prefill:<variant>`` / ``decode:<variant>``) routed ``cost_aware``
+  across heterogeneous model variants, with :func:`make_decode_pool`
+  wiring a :class:`~repro.balancer.types.DecodePool` to one fused vmapped
+  decode step so requests join the in-flight batch at token boundaries.
+  ``gen:<variant>`` servers (:func:`make_generate_fn`) are the
+  generation-granularity baseline the benchmark compares against.
+"""
 from __future__ import annotations
 
+import threading
+import time
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
+from repro.balancer import (
+    DecodeHandoff,
+    DecodePool,
+    DecodeResult,
+    LoadBalancer,
+    Server,
+)
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.models import abstract_decode_state, build_model, input_specs
+from repro.models import ModelBundle, abstract_decode_state, build_model, input_specs
+from repro.models.lm import pool_decode_state, slot_insert
 
 from .sharding import (
     ShardingPolicy,
@@ -54,3 +81,304 @@ def shard_decode_step(cfg: ArchConfig, shape: ShapeConfig, policy: ShardingPolic
         donate_argnums=(1,),
     )
     return fn, (params_abs, state_abs, tokens_abs)
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching LM serving engine (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+def make_prefill_fn(
+    bundle: ModelBundle, params, cache_len: int
+) -> Callable[[Tuple], DecodeHandoff]:
+    """Request handler for a ``prefill:<variant>`` server.
+
+    Theta contract: ``(prompt (1, S) ints, n_new, eos)``.  One fused
+    ``prefill_state`` call (a ``lax.scan`` of the decode step — NOT a
+    Python per-token loop) produces the last-position logits and the
+    decode state; the returned :class:`DecodeHandoff` carries that state
+    plus the first greedy token into a decode slot.
+    """
+    if bundle.prefill_state is None:
+        raise ValueError(f"family '{bundle.cfg.family}' has no prefill_state")
+    pf = jax.jit(bundle.prefill_state, static_argnums=(2,))
+
+    def prefill(theta) -> DecodeHandoff:
+        prompt, n_new, eos = theta
+        logits, state = pf(params, jnp.asarray(prompt, jnp.int32), cache_len)
+        return DecodeHandoff(
+            state=state,
+            token=int(jnp.argmax(logits[0, -1])),
+            max_new=int(n_new),
+            eos=eos,
+        )
+
+    return prefill
+
+
+def make_decode_pool(
+    bundle: ModelBundle,
+    params,
+    *,
+    n_slots: int,
+    cache_len: int,
+    name: str,
+    tag: str,
+) -> DecodePool:
+    """A :class:`DecodePool` over one fused vmapped greedy decode step.
+
+    The pooled state stacks ``n_slots`` independent ``B=1`` decode states
+    (per-slot ``pos`` included, so admissions at different token
+    boundaries decode at independent positions); the step ``vmap``s the
+    bundle's decode step over the slot axis and takes the argmax on
+    device, so one XLA launch advances every occupied slot one token and
+    returns only ``(n_slots,)`` token ids to the host.  ``donate_argnums``
+    recycles the pooled KV/SSM buffers in place.
+    """
+    cfg = bundle.cfg
+
+    def step_one(state, tok):
+        logits, state = bundle.decode_step(params, state, tok.reshape(1, 1))
+        return state, jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
+
+    @jax.jit
+    def insert(pool_state, seq_state, slot):
+        return slot_insert(pool_state, seq_state, slot)
+
+    step_all = jax.jit(jax.vmap(step_one), donate_argnums=(0,))
+
+    def step(pool_state, tokens):
+        state, nxt = step_all(pool_state, jnp.asarray(tokens, jnp.int32))
+        return state, np.asarray(nxt)
+
+    return DecodePool(
+        step_fn=step,
+        insert_fn=lambda st, slot, seq: insert(st, seq, slot),
+        init_state_fn=lambda: pool_decode_state(cfg, n_slots, cache_len),
+        n_slots=n_slots,
+        name=name,
+        capacity_tags=[tag],
+    )
+
+
+def make_generate_fn(
+    bundle: ModelBundle,
+    params,
+    cache_len: int,
+    clock: Callable[[], float] = time.monotonic,
+) -> Callable[[Tuple], DecodeResult]:
+    """Generation-granularity baseline handler for a ``gen:<variant>`` server.
+
+    Same theta contract and greedy sampling as the continuous path, but
+    the request monopolizes the server for its whole generation: fused
+    prefill, then a ``B=1`` decode loop.  Tokens are bit-identical to the
+    continuous path (the regression test's contract); only the scheduling
+    differs, which is exactly what BENCH_serve.json measures.
+    """
+    if bundle.prefill_state is None:
+        raise ValueError(f"family '{bundle.cfg.family}' has no prefill_state")
+    pf = jax.jit(bundle.prefill_state, static_argnums=(2,))
+    step = jax.jit(bundle.decode_step)
+
+    def generate(theta) -> DecodeResult:
+        prompt, n_new, eos = theta
+        logits, state = pf(params, jnp.asarray(prompt, jnp.int32), cache_len)
+        tokens = [int(jnp.argmax(logits[0, -1]))]
+        times = [clock()]
+        while len(tokens) < int(n_new) and (eos is None or tokens[-1] != eos):
+            logits, state = step(
+                params, state, jnp.full((1, 1), tokens[-1], jnp.int32)
+            )
+            tokens.append(int(jnp.argmax(logits[0, -1])))
+            times.append(clock())
+        return DecodeResult(
+            tokens=np.asarray(tokens, dtype=np.int64), token_times=times
+        )
+
+    return generate
+
+
+class Generation:
+    """Client handle for one generation through the engine.
+
+    In continuous mode it chains the two dispatches — the prefill
+    request's completion callback submits the :class:`DecodeHandoff` to
+    the ``decode:<variant>`` tag — so the client thread never blocks
+    between the stages and thousands of generations can be in flight at
+    once (the open-loop load model).  ``result()`` joins the chain.
+    """
+
+    def __init__(self, lb: LoadBalancer, variant: str, theta, mode: str) -> None:
+        self._lb = lb
+        self.variant = variant
+        self.submitted_at = time.monotonic()
+        self.prefill_done_at: Optional[float] = None
+        self._result: Optional[DecodeResult] = None
+        self._error: Optional[BaseException] = None
+        self._done = threading.Event()
+        if mode == "generation":
+            self._lb.submit_async(theta, tag=f"gen:{variant}").add_done_callback(
+                self._on_final
+            )
+        else:
+            self._lb.submit_async(theta, tag=f"prefill:{variant}").add_done_callback(
+                self._on_prefill
+            )
+
+    def _on_prefill(self, req) -> None:
+        if req.error is not None:
+            self._error = req.error
+            self._done.set()
+            return
+        self.prefill_done_at = req.completed_at
+        self._lb.submit_async(
+            req.result, tag=f"decode:{self.variant}"
+        ).add_done_callback(self._on_final)
+
+    def _on_final(self, req) -> None:
+        self._error = req.error
+        self._result = req.result
+        self._done.set()
+
+    def result(self, timeout: Optional[float] = None) -> DecodeResult:
+        if not self._done.wait(timeout):
+            raise TimeoutError("generation did not complete in time")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    @property
+    def ttft_s(self) -> float:
+        """Time from submission to the first token's clock stamp."""
+        return self.result().token_times[0] - self.submitted_at
+
+
+class ServingEngine:
+    """Heterogeneous LM serving through the paper's load balancer.
+
+    ``variants`` maps a variant name to its :class:`ArchConfig`; every
+    variant gets its own tag family and ``n_replicas`` servers, and the
+    balancer's ``cost_aware`` policy (default) routes within each family
+    by the runtime EWMA — the paper's dynamic dispatch, with model
+    variants in place of MLDA levels.
+
+    ``mode='continuous'`` (the tentpole path) builds per-variant
+    ``prefill:<v>`` servers + ``decode:<v>`` :class:`DecodePool`s;
+    ``mode='generation'`` builds the ``gen:<v>`` baseline where one
+    request monopolizes a server per generation.  Both modes serve the
+    same theta contract ``(prompt, n_new, eos)`` with greedy sampling and
+    produce bit-identical tokens.
+    """
+
+    def __init__(
+        self,
+        variants: Mapping[str, ArchConfig],
+        *,
+        mode: str = "continuous",
+        n_replicas: int = 1,
+        n_slots: int = 4,
+        cache_len: int = 96,
+        policy: str = "cost_aware",
+        seed: int = 0,
+        exact_telemetry: bool = False,
+    ) -> None:
+        if mode not in ("continuous", "generation"):
+            raise ValueError(f"unknown serving mode '{mode}'")
+        self.mode = mode
+        self.cache_len = cache_len
+        self.variants: Dict[str, ArchConfig] = dict(variants)
+        self.bundles: Dict[str, ModelBundle] = {}
+        self.params: Dict[str, object] = {}
+        servers: List[Server] = []
+        for i, (vname, cfg) in enumerate(self.variants.items()):
+            bundle = build_model(cfg)
+            params = bundle.init(jax.random.key(seed + i))
+            self.bundles[vname] = bundle
+            self.params[vname] = params
+            for r in range(n_replicas):
+                if mode == "continuous":
+                    servers.append(
+                        Server(
+                            make_prefill_fn(bundle, params, cache_len),
+                            name=f"prefill:{vname}#{r}",
+                            capacity_tags=[f"prefill:{vname}"],
+                        )
+                    )
+                    servers.append(
+                        make_decode_pool(
+                            bundle,
+                            params,
+                            n_slots=n_slots,
+                            cache_len=cache_len,
+                            name=f"decode:{vname}#{r}",
+                            tag=f"decode:{vname}",
+                        )
+                    )
+                else:
+                    servers.append(
+                        Server(
+                            make_generate_fn(bundle, params, cache_len),
+                            name=f"gen:{vname}#{r}",
+                            capacity_tags=[f"gen:{vname}"],
+                        )
+                    )
+        self.lb = LoadBalancer(
+            servers, policy=policy, exact_telemetry=exact_telemetry
+        )
+
+    # -- client API ----------------------------------------------------------
+    def submit(
+        self, variant: str, prompt, n_new: int, *, eos: Optional[int] = None
+    ) -> Generation:
+        """Submit one generation (non-blocking); join via ``.result()``."""
+        if variant not in self.variants:
+            raise KeyError(f"unknown variant '{variant}'")
+        theta = (np.asarray(prompt, dtype=np.int64), int(n_new), eos)
+        return Generation(self.lb, variant, theta, self.mode)
+
+    def summary(self):
+        return self.lb.summary()
+
+    def stats_table(self):
+        return self.lb.stats_table()
+
+    def shutdown(self) -> None:
+        self.lb.shutdown()
+
+    def __enter__(self) -> "ServingEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+
+def serving_metrics(
+    gens: List[Generation], wall_s: float, summary: Optional[dict] = None
+) -> dict:
+    """Aggregate serving metrics from completed generations.
+
+    ``tokens_per_s`` counts every emitted token against the wall clock;
+    ``ttft`` is submission -> first-token; ``per_token`` quantiles are
+    over inter-token gaps (the decode cadence clients observe).
+    """
+    results = [g.result() for g in gens]
+    n_tokens = int(sum(len(r.tokens) for r in results))
+    ttft = [g.ttft_s for g in gens]
+    gaps: List[float] = []
+    for r in results:
+        gaps.extend(np.diff(r.token_times).tolist())
+    out = {
+        "n_requests": len(gens),
+        "n_tokens": n_tokens,
+        "wall_s": wall_s,
+        "tokens_per_s": n_tokens / wall_s if wall_s > 0 else float("nan"),
+        "ttft_mean_s": float(np.mean(ttft)) if ttft else float("nan"),
+        "ttft_p99_s": float(np.percentile(ttft, 99)) if ttft else float("nan"),
+        "per_token_p50_s": float(np.percentile(gaps, 50)) if gaps else float("nan"),
+        "per_token_p99_s": float(np.percentile(gaps, 99)) if gaps else float("nan"),
+    }
+    if summary is not None:
+        occ = summary.get("slot_occupancy", {})
+        if occ:
+            out["slot_occupancy"] = {
+                name: round(row["mean"], 4) for name, row in occ.items()
+            }
+    return out

@@ -1,0 +1,217 @@
+"""Continuous-batching LM serving engine tests (DESIGN.md §10).
+
+Fast layers (fake step functions, no device work) cover the DecodePool
+slot lifecycle, FIFO admission, telemetry and failure semantics; two
+real-model tests pin the numerical contracts — fused prefill vs the
+teacher-forcing loop, and pooled continuous decode vs sequential B=1
+decode — on a dense and an SSM family (the vmap-batch-invariance fix in
+models/ssm.py is what makes the latter hold for mamba).
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.balancer import (
+    DecodeHandoff,
+    DecodePool,
+    LoadBalancer,
+    ServerDiedError,
+)
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.models.lm import decode_step, init_decode_state, prefill_state
+from repro.runtime.serve_loop import ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# Fake-pool fixtures: the slot lifecycle without device work
+# ---------------------------------------------------------------------------
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+def counting_pool(n_slots=4, clock=None, **kw):
+    """A DecodePool whose 'model' emits token+1 each step."""
+
+    def step_fn(state, toks):
+        return state + 1, toks + 1
+
+    return DecodePool(
+        step_fn, lambda st, slot, seq: st, lambda: 0, n_slots,
+        clock=clock or FakeClock(), **kw,
+    )
+
+
+def handoff(token, max_new, eos=None):
+    return DecodeHandoff(state=None, token=token, max_new=max_new, eos=eos)
+
+
+def test_slot_eviction_on_max_length_and_eos():
+    pool = counting_pool(n_slots=4)
+    lb = LoadBalancer([pool])
+    # max-length eviction: budget 3 -> handoff token + 2 steps
+    r_len = lb.submit_async(handoff(10, 3), tag="")
+    # EOS eviction: token 41 -> 42 == eos stops a budget-10 request early
+    r_eos = lb.submit_async(handoff(41, 10, eos=42), tag="")
+    assert lb.result(r_len, timeout=5).tokens.tolist() == [10, 11, 12]
+    assert lb.result(r_eos, timeout=5).tokens.tolist() == [41, 42]
+    # both slots were evicted back to the free list
+    assert pool.n_free == pool.n_slots
+    lb.shutdown()
+
+
+def test_instant_finish_never_touches_device_state():
+    built = []
+
+    def init_state():
+        built.append(1)
+        return 0
+
+    pool = DecodePool(
+        lambda st, t: (st, t + 1), lambda st, slot, seq: st, init_state, 2,
+        clock=FakeClock(),
+    )
+    lb = LoadBalancer([pool])
+    # budget 1: the prefill already produced the only token
+    assert lb.result(lb.submit_async(handoff(7, 1)), timeout=5).tokens.tolist() == [7]
+    # handoff token == eos: finished at admission too
+    assert lb.result(
+        lb.submit_async(handoff(9, 8, eos=9)), timeout=5
+    ).tokens.tolist() == [9]
+    assert not built, "instant-finish admissions must not allocate pool state"
+    lb.shutdown()
+
+
+def test_fifo_admission_order_and_token_boundary_join():
+    clock = FakeClock()
+    pool = counting_pool(n_slots=2, clock=clock)
+    lb = LoadBalancer([pool])
+    # Two long generations fill both slots; two more queue behind them and
+    # must join in arrival order as slots free at token boundaries.
+    first = [lb.submit_async(handoff(100 * i, 3)) for i in (1, 2)]
+    later = [lb.submit_async(handoff(100 * i, 2)) for i in (3, 4)]
+    for r in first + later:
+        lb.result(r, timeout=5)
+    order = [req for _, req in pool.admit_log]
+    assert order == first + later, "admission must be FIFO across joins"
+    # the joiners reused the two slots
+    assert sorted(slot for slot, _ in pool.admit_log) == [0, 0, 1, 1]
+    lb.shutdown()
+
+
+def test_pool_death_fails_in_flight_without_retry():
+    calls = []
+
+    def dying_step(state, toks):
+        calls.append(1)
+        if len(calls) >= 2:
+            raise RuntimeError("device lost")
+        return state, toks + 1
+
+    pool = DecodePool(
+        dying_step, lambda st, slot, seq: st, lambda: 0, 2, clock=FakeClock()
+    )
+    lb = LoadBalancer([pool], max_retries=2)
+    req = lb.submit_async(handoff(5, 10))
+    with pytest.raises(ServerDiedError):
+        lb.result(req, timeout=5)
+    assert req.retries == 0, "continuous requests must not retry (state died)"
+    assert pool.dead
+    lb.shutdown()
+
+
+def test_no_leaked_threads_after_shutdown():
+    baseline = threading.active_count()
+    pool = counting_pool(n_slots=2)
+    lb = LoadBalancer([pool])
+    reqs = [lb.submit_async(handoff(i, 4)) for i in range(6)]
+    for r in reqs:
+        lb.result(r, timeout=5)
+    lb.shutdown()
+    assert threading.active_count() == baseline
+
+
+def test_token_telemetry_and_stats_table():
+    pool = counting_pool(n_slots=4, capacity_tags=["decode:x"])
+    lb = LoadBalancer([pool])
+    reqs = [lb.submit_async(handoff(0, n), tag="decode:x") for n in (3, 1, 5)]
+    for r in reqs:
+        lb.result(r, timeout=5)
+    s = lb.summary()
+    # emitted = generated minus the handoff tokens: (3-1) + 0 + (5-1)
+    assert s["tag_tokens"] == {"decode:x": 6}
+    occ = s["slot_occupancy"][pool.name]
+    assert occ["capacity"] == 4
+    assert 0 < occ["mean"] <= 1
+    (row,) = [r for r in lb.stats_table() if r["tag"] == "decode:x"]
+    assert row["n_done"] == 3
+    assert row["tokens"] == 6
+    lb.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Real-model numerical contracts
+# ---------------------------------------------------------------------------
+REAL_ARCHS = ["qwen2-0.5b", "mamba2-1.3b"]
+CACHE_LEN = 24
+
+
+@pytest.fixture(scope="module", params=REAL_ARCHS)
+def model(request):
+    cfg = ARCHS[request.param].reduced()
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.key(0))
+    return cfg, bundle, params
+
+
+def test_prefill_state_matches_teacher_forcing_loop(model):
+    """Satellite 1: the fused scan prefill IS the per-token loop, bitwise."""
+    cfg, bundle, params = model
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab, size=(1, 6))
+    logits_f, state_f = jax.jit(
+        lambda p, t: prefill_state(p, cfg, t, CACHE_LEN)
+    )(params, jnp.asarray(prompt, jnp.int32))
+
+    state = init_decode_state(cfg, 1, CACHE_LEN)
+    step = jax.jit(lambda p, st, t: decode_step(p, cfg, st, t))
+    for t in range(prompt.shape[1]):
+        logits_l, state = step(params, state, jnp.asarray(prompt[:, t : t + 1], jnp.int32))
+
+    assert int(jnp.argmax(logits_f[0, -1])) == int(jnp.argmax(logits_l[0, -1]))
+    assert int(state_f.pos) == int(state.pos) == prompt.shape[1]
+
+
+def test_continuous_tokens_bit_identical_to_sequential(model):
+    """The tentpole contract: slot-pooled continuous decode emits exactly
+    the tokens of sequential one-request-at-a-time decode."""
+    cfg, bundle, params = model
+    name = cfg.arch_id
+    rng = np.random.default_rng(2)
+    work = [
+        (rng.integers(0, cfg.vocab, size=(1, 4)), n_new)
+        for n_new in (5, 1, 3, 7, 2, 4)
+    ]
+    outs = {}
+    for mode in ("continuous", "generation"):
+        with ServingEngine(
+            {name: cfg}, mode=mode, n_slots=3, cache_len=CACHE_LEN
+        ) as eng:
+            gens = [eng.submit(name, p, n) for p, n in work]
+            outs[mode] = [g.result(timeout=120).tokens for g in gens]
+            if mode == "continuous":
+                s = eng.summary()
+                assert sum(s["tag_tokens"].values()) > 0
+                assert s["slot_occupancy"]
+    for a, b in zip(outs["continuous"], outs["generation"]):
+        assert np.array_equal(a, b)
+    for (_, n_new), toks in zip(work, outs["continuous"]):
+        assert len(toks) == n_new
