@@ -25,7 +25,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core import GaussianRandomWalk, MLDASampler, available_policies
-from repro.core.balancer import LoadBalancer, Server
+from repro.balancer import LoadBalancer, Server
 from repro.core.mlda import BalancedDensity
 
 JSON_PATH = os.environ.get(

@@ -1,0 +1,222 @@
+"""Remote serving benchmark: binary framing vs UM-Bridge JSON vs in-process.
+
+The paper deploys its simulation servers behind a language-agnostic
+network interface (UM-Bridge); ``repro.net`` keeps that JSON protocol for
+interop and adds a zero-copy binary framing mode for the hot path.  This
+bench quantifies the gap on one workload: a pool of batch servers
+evaluating ``DIM``-dimensional fp32 parameter vectors (large enough that
+serialization, not dispatch, dominates — ``BENCH_dispatch.json`` puts the
+dispatch hot path at ~93 µs/request, two orders below the JSON encode
+cost of an 8 KB payload), driven through the real :class:`LoadBalancer`
+with coalescing, over loopback connections:
+
+* **inproc**      — the same servers called without a wire (upper bound);
+* **json_rps**    — :class:`JSONTransport` over HTTP/1.1 keep-alive;
+* **binary_rps**  — :class:`BinaryTransport`, pipelined framed calls.
+
+Results land in ``BENCH_remote.json``.  Bit-identity is asserted inline:
+the binary rows must equal the in-process fp32 results byte for byte
+(JSON returns float64 — numerically close, never bit-checked).
+
+``--smoke`` runs a reduced size and gates CI: binary req/s must clear
+``--min-rps``, binary must beat JSON by ``--min-ratio`` (acceptance:
+>= 3x), and nothing may leak threads.  Loopback here means in-process
+``socketpair`` connections (hermetic, no TCP stack); pass ``--tcp`` to
+bind 127.0.0.1 instead.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.balancer import LoadBalancer, gather
+from repro.net import ServerShell, make_transport, remote_servers_for
+
+JSON_PATH = os.environ.get(
+    "BENCH_REMOTE_JSON",
+    os.path.join(os.path.dirname(__file__), "BENCH_remote.json"),
+)
+
+DIM = 2048  # fp32 theta dimension: ~8 KB per request each way
+N_SERVERS = 4
+N_CLIENTS = 8
+MAX_BATCH = 8
+BATCH_WINDOW_S = 0.002
+
+
+def forward(stacked: np.ndarray) -> np.ndarray:
+    """A cheap but real stacked forward: rows of 2*theta + iota, fp32."""
+    stacked = np.asarray(stacked, dtype=np.float32)
+    return 2.0 * stacked + np.arange(stacked.shape[-1], dtype=np.float32)
+
+
+def make_pool():
+    from repro.balancer import BatchServer
+
+    return [
+        BatchServer(
+            forward, name=f"fwd-{i}", capacity_tags=("fwd",),
+            max_batch=MAX_BATCH,
+        )
+        for i in range(N_SERVERS)
+    ]
+
+
+def thetas_for(n: int) -> np.ndarray:
+    return np.random.default_rng(0).random((n, DIM)).astype(np.float32)
+
+
+def drive(servers, n_requests: int) -> float:
+    """Requests/s through the balancer: N_CLIENTS threads of coalescable
+    submits (the ensemble driver's admission pattern)."""
+    lb = LoadBalancer(
+        servers, batch_window_s=BATCH_WINDOW_S, max_batch=MAX_BATCH
+    )
+    thetas = thetas_for(n_requests)
+    per_client = n_requests // N_CLIENTS
+    chunks = [
+        thetas[c * per_client:(c + 1) * per_client] for c in range(N_CLIENTS)
+    ]
+    all_reqs: List[List] = [[] for _ in range(N_CLIENTS)]
+
+    def client(c: int) -> None:
+        chunk = chunks[c]
+        for k in range(0, len(chunk), MAX_BATCH):
+            all_reqs[c].extend(
+                lb.submit_many(
+                    list(chunk[k:k + MAX_BATCH]), tag="fwd", batchable=True
+                )
+            )
+
+    threads = [
+        threading.Thread(target=client, args=(c,)) for c in range(N_CLIENTS)
+    ]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    n_done = 0
+    for reqs in all_reqs:
+        gather(reqs, timeout=300)
+        for r in reqs:
+            if r.error is not None:
+                raise SystemExit(f"request failed: {r.error!r}")
+        n_done += len(reqs)
+    wall = time.perf_counter() - t0
+    lb.shutdown()
+    return n_done / wall
+
+
+def assert_bit_identical(servers) -> None:
+    """Remote batched results must match in-process fp32 bit for bit."""
+    probe = thetas_for(MAX_BATCH)
+    expect = forward(probe)
+    with LoadBalancer(servers, batch_window_s=BATCH_WINDOW_S,
+                      max_batch=MAX_BATCH) as lb:
+        reqs = lb.submit_many(list(probe), tag="fwd", batchable=True)
+        gather(reqs, timeout=60)
+        for i, r in enumerate(reqs):
+            if r.error is not None:
+                raise SystemExit(f"bit-identity probe failed: {r.error!r}")
+            if np.asarray(r.result).tobytes() != expect[i].tobytes():
+                raise SystemExit(f"remote result not bit-identical (row {i})")
+
+
+def main(
+    smoke: bool = False,
+    min_rps: float = 0.0,
+    min_ratio: float = 0.0,
+    tcp: bool = False,
+) -> List[str]:
+    baseline_threads = threading.active_count()
+    n_requests = 512 if smoke else 4096
+
+    rates: Dict[str, float] = {}
+    rates["inproc"] = drive(make_pool(), n_requests)
+
+    shell_kw = {"host": "127.0.0.1", "port": 0} if tcp else {}
+    for mode, binary in (("json", False), ("binary", True)):
+        shell = ServerShell(
+            make_pool(), name=f"bench-{mode}", max_workers=N_SERVERS,
+            **shell_kw,
+        ).start()
+        tr = make_transport(shell, binary=binary, n_connections=N_CLIENTS)
+        servers = remote_servers_for(tr, max_batch=MAX_BATCH)
+        if binary:
+            assert_bit_identical(servers)
+        rates[mode] = drive(servers, n_requests)
+        tr.close()
+        shell.stop()
+
+    ratio = rates["binary"] / rates["json"]
+    time.sleep(0.2)  # let reader/conn threads finish parking out
+    leaked = threading.active_count() - baseline_threads
+
+    result = {
+        "benchmark": "remote",
+        "workload": {
+            "dim": DIM,
+            "payload_bytes": DIM * 4,
+            "servers": N_SERVERS,
+            "clients": N_CLIENTS,
+            "max_batch": MAX_BATCH,
+            "n_requests": n_requests,
+            "transport": "tcp" if tcp else "socketpair",
+            "smoke": smoke,
+        },
+        "inproc_rps": round(rates["inproc"], 1),
+        "json_rps": round(rates["json"], 1),
+        "binary_rps": round(rates["binary"], 1),
+        "binary_over_json": round(ratio, 2),
+        "wire_overhead_vs_inproc": round(rates["inproc"] / rates["binary"], 2),
+        "bit_identical_fp32": True,  # asserted above, or we never got here
+        "leaked_threads": leaked,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+
+    rows = [f"remote_{k}_rps,{v:.0f},req/s" for k, v in rates.items()]
+    rows.append(f"remote_binary_over_json,{ratio:.2f},x")
+    rows.append(f"remote_leaked_threads,{leaked},count")
+    rows.append(f"remote_json,{JSON_PATH},path")
+
+    if leaked != 0:
+        raise SystemExit(f"remote serving leaked {leaked} threads")
+    if min_rps and rates["binary"] < min_rps:
+        raise SystemExit(
+            f"binary transport regression: {rates['binary']:.0f} req/s "
+            f"< floor {min_rps:.0f}"
+        )
+    if min_ratio and ratio < min_ratio:
+        raise SystemExit(
+            f"binary/JSON ratio regression: {ratio:.2f}x < floor {min_ratio}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="reduced size + CI gate")
+    ap.add_argument(
+        "--min-rps", type=float, default=0.0,
+        help="fail below this binary-mode req/s",
+    )
+    ap.add_argument(
+        "--min-ratio", type=float, default=0.0,
+        help="fail when binary/JSON falls below this (acceptance: 3.0)",
+    )
+    ap.add_argument(
+        "--tcp", action="store_true",
+        help="loopback TCP sockets instead of in-process socketpairs",
+    )
+    args = ap.parse_args()
+    for row in main(smoke=args.smoke, min_rps=args.min_rps,
+                    min_ratio=args.min_ratio, tcp=args.tcp):
+        print(row)

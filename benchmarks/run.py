@@ -10,6 +10,7 @@ Prints ``name,value,unit`` CSV rows:
   * bench_kernels   -> kernel micro-bench (CPU wall; TPU story in §Roofline)
   * bench_gp        -> GP surrogate accuracy/fit time (paper §6.1)
   * bench_serve     -> continuous-batching LM serving vs generation baseline
+  * bench_remote    -> network serving: binary framing vs UM-Bridge JSON
   * roofline        -> per-cell roofline fractions from the dry-run JSONs
 """
 from __future__ import annotations
@@ -26,7 +27,7 @@ def main() -> None:
     ap.add_argument(
         "--only", default="",
         help="comma-separated subset "
-             "(balancer,dispatch,mlda,batch,kernels,gp,serve,roofline)"
+             "(balancer,dispatch,mlda,batch,kernels,gp,serve,remote,roofline)"
     )
     args = ap.parse_args()
 
@@ -37,6 +38,7 @@ def main() -> None:
         bench_gp,
         bench_kernels,
         bench_mlda,
+        bench_remote,
         bench_serve,
         roofline,
     )
@@ -49,6 +51,7 @@ def main() -> None:
         "mlda": bench_mlda.main,
         "batch": lambda: bench_batch.main(smoke=True)[0],
         "serve": lambda: bench_serve.main(smoke=True)[0],
+        "remote": lambda: bench_remote.main(smoke=True),
         "roofline": roofline.main,
     }
     if args.fast:

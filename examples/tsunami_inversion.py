@@ -21,10 +21,20 @@ realised batch sizes print at the end (``batch_histogram``).  Disable
 with ``batch_solves=False`` to compare; ``benchmarks/bench_batch.py``
 measures the throughput win.
 
+Remote serving (``--remote host:port[,host:port]``, DESIGN.md §11): the
+level pools live in *other processes* — each endpoint runs
+``python -m repro.launch.export`` — and this process builds
+``RemoteBatchServer`` replicas over the pipelined binary transport
+instead of in-process servers.  Coalesced batches cross the wire as one
+framed call; telemetry splits wire time from remote service time
+(``wire_split`` prints at the end).  ``--remote-json`` switches to the
+UM-Bridge HTTP/JSON interop mode for comparison.
+
 Run:  PYTHONPATH=src python examples/tsunami_inversion.py  (~5-10 min CPU)
 """
 import argparse
 import time
+from dataclasses import replace
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +51,7 @@ from repro.swe import (
     TohokuScenario,
     make_hierarchy,
     make_level_servers,
+    make_remote_level_servers,
     train_level0_gp,
 )
 
@@ -55,8 +66,22 @@ def main():
         choices=[""] + available_policies(),
         help="scheduling policy (default: the workload's balancer_policy)",
     )
+    ap.add_argument(
+        "--remote",
+        default="",
+        help="comma-separated host:port endpoints (repro.launch.export "
+        "processes) to evaluate on instead of in-process pools",
+    )
+    ap.add_argument(
+        "--remote-json",
+        action="store_true",
+        help="use the UM-Bridge HTTP/JSON interop mode instead of binary framing",
+    )
     args = ap.parse_args()
     w = CONFIGS[args.workload]
+    if args.remote:
+        endpoints = tuple(a.strip() for a in args.remote.split(",") if a.strip())
+        w = replace(w, remote_servers=endpoints, remote_binary=not args.remote_json)
     n_chains = args.chains or w.n_chains
     policy = args.policy or w.balancer_policy
 
@@ -68,20 +93,31 @@ def main():
     prob, f_fine, f_coarse = h["problem"], h["forward_fine"], h["forward_coarse"]
     print(f"      y_obs = {np.round(prob.y_obs, 4)} (truth at {prob.theta_true})")
 
-    print(f"[2/4] training level-0 GP on {w.gp_train_points} LHS coarse solves")
-    t0 = time.time()
-    gp = train_level0_gp(f_coarse, prob, n_train=w.gp_train_points, steps=w.gp_opt_steps)
-    print(f"      {time.time() - t0:.1f}s")
+    if w.remote_servers:
+        # The exporting processes own the level pools (GP included): no
+        # local surrogate training, just transports + remote replicas.
+        print(f"[2/4] remote serving: dialing {list(w.remote_servers)} "
+              f"({'binary' if w.remote_binary else 'UM-Bridge JSON'} mode)")
+        servers = make_remote_level_servers(w, w.remote_servers)
+        print(f"      {len(servers)} remote servers: "
+              f"{sorted(t for s in servers for t in s.capacity_tags)}")
+    else:
+        print(f"[2/4] training level-0 GP on {w.gp_train_points} LHS coarse solves")
+        t0 = time.time()
+        gp = train_level0_gp(
+            f_coarse, prob, n_train=w.gp_train_points, steps=w.gp_opt_steps
+        )
+        print(f"      {time.time() - t0:.1f}s")
+        servers = make_level_servers(
+            w, gp, f_coarse, f_fine,
+            batch_forwards=(
+                None, h["forward_coarse_batch"], h["forward_fine_batch"]
+            ) if w.batch_solves else None,
+        )
 
     print(f"[3/4] MLDA x {n_chains} chains via the ensemble driver "
           f"(policy={policy}, speculative={w.speculative_prefetch}, "
           f"batch_solves={w.batch_solves})")
-    servers = make_level_servers(
-        w, gp, f_coarse, f_fine,
-        batch_forwards=(
-            None, h["forward_coarse_batch"], h["forward_fine_batch"]
-        ) if w.batch_solves else None,
-    )
 
     runner, lb = balanced_mlda(
         servers,
@@ -140,7 +176,16 @@ def main():
     if s["batch_histogram"]:
         print(f"      realised batch sizes {{level: {{size: count}}}}: "
               f"{s['batch_histogram']}")
+    if s.get("wire_split"):
+        print("      wire vs remote service (EWMA ms per call):")
+        for key, wsp in sorted(s["wire_split"].items()):
+            print(f"        {key}: wire={wsp['wire_ewma_s'] * 1e3:.2f}ms "
+                  f"service={wsp['service_ewma_s'] * 1e3:.2f}ms "
+                  f"({wsp['calls']} calls)")
     lb.shutdown()  # joins the dispatcher + worker pool; no leaked threads
+    if w.remote_servers:  # one shared transport per endpoint: close each once
+        for tr in {id(srv.transport): srv.transport for srv in servers}.values():
+            tr.close()
 
     # Fig. 6 analogue: GP over the full probe-0 time series.
     print("      fitting Fig. 6 time-series GP (probe 21418 analogue)")

@@ -19,7 +19,8 @@ Layout (DESIGN.md §2-3):
 * :mod:`repro.balancer.telemetry`  — idle-time/timeline bookkeeping and
   the runtime EWMA cost model, behind its own lock.
 
-``repro.core.balancer`` re-exports this package for backward compatibility.
+``repro.core.balancer`` survives only as a deprecated one-line stub that
+re-exports this package with a :class:`DeprecationWarning`.
 """
 from .dispatcher import LoadBalancer
 from .futures import as_completed, gather, wait_any
@@ -45,6 +46,7 @@ from .types import (
     DecodeResult,
     DecodeSlot,
     Request,
+    RequestCancelled,
     Server,
     ServerDiedError,
     ServerStats,
@@ -68,6 +70,7 @@ __all__ = [
     "PolicyContext",
     "PowerOfTwoPolicy",
     "Request",
+    "RequestCancelled",
     "RoundRobinPolicy",
     "SchedulingPolicy",
     "Server",

@@ -50,7 +50,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from .policies import PolicyContext, SchedulingPolicy, create_policy
 from .queueing import FreeServerIndex, IndexedQueue
 from .telemetry import Telemetry
-from .types import Request, Server, ServerDiedError
+from .types import Request, RequestCancelled, Server, ServerDiedError
 
 
 class _BatchWaiter:
@@ -250,6 +250,7 @@ class LoadBalancer:
         req = Request(
             theta=theta, tag=tag, batchable=batchable, arrived_at=time.monotonic()
         )
+        req._cancel_hook = self.cancel
         fire: Optional[List[_BatchWaiter]] = None
         pairs: List[Tuple[Request, Server]] = []
         with self._cv:
@@ -299,6 +300,8 @@ class LoadBalancer:
             )
             for theta in thetas
         ]
+        for req in reqs:
+            req._cancel_hook = self.cancel
         error: Optional[str] = None
         fire: Optional[List[_BatchWaiter]] = None
         pairs: List[Tuple[Request, Server]] = []
@@ -329,12 +332,40 @@ class LoadBalancer:
                 w.event.set()
         return reqs
 
-    def result(self, req: Request, timeout: Optional[float] = None) -> Any:
+    def result(
+        self,
+        req: Request,
+        timeout: Optional[float] = None,
+        *,
+        cancel_on_timeout: bool = False,
+    ) -> Any:
+        """Wait for ``req``; with ``cancel_on_timeout`` a deadline miss
+        first tries to :meth:`cancel` the request so a still-queued one is
+        reclaimed instead of completing into the void (an in-flight one is
+        merely abandoned — its result is discarded when it lands)."""
         if not req.done.wait(timeout):
+            if cancel_on_timeout:
+                self.cancel(req)
             raise TimeoutError("request did not complete in time")
         if req.error is not None:
             raise req.error
         return req.result
+
+    def cancel(self, req: Request) -> bool:
+        """Cancel ``req`` if it is still queued (client deadline support).
+
+        Queued requests are popped in O(tag queue) and complete
+        immediately with :class:`RequestCancelled`; completed or in-flight
+        requests return False untouched — a dispatched evaluation cannot
+        be recalled from its server, the caller abandons it instead.
+        """
+        with self._cv:
+            if req.done.is_set() or req not in self._queue:
+                return False
+            self._queue.pop(req)
+            req.error = RequestCancelled("request cancelled before dispatch")
+        req._complete()
+        return True
 
     # -- dispatch loop (Algorithm 1's scheduler half) ------------------------
     def _dispatch_loop(self) -> None:
@@ -512,9 +543,29 @@ class LoadBalancer:
         else:
             req.result = result
         self._telemetry.record_completion(req, server)
+        self._book_wire(req.tag, server, req.completed_at - req.dispatched_at)
         nxt = self._free_server(server)
         req._complete()
         return nxt
+
+    def _book_wire(self, tag: str, server: Server, total_s: float) -> None:
+        """Split a remote completion into wire vs remote service seconds.
+
+        Remote servers (:mod:`repro.net`) report the shell-side handler
+        seconds of their last call in ``last_service_s``; the difference
+        to the observed round trip is serialization + socket time — the
+        network overhead the binary framing mode exists to shrink.  A
+        server is driven by one worker at a time, so reading the
+        attribute here is race-free.  No-op for local servers.
+        """
+        if not server.remote:
+            return
+        service = server.last_service_s
+        if service is None:
+            return
+        self._telemetry.record_wire(
+            server.name, tag, max(0.0, total_s - service), service
+        )
 
     def _free_server(self, server: Server) -> Optional[Tuple[Request, Server]]:
         """Free ``server`` and grab the next ready dispatch decision.
@@ -701,6 +752,7 @@ class LoadBalancer:
         self._telemetry.record_completion(req, server)
         self._telemetry.record_batched(extra, server)
         self._telemetry.record_batch_size(req.tag, len(members))
+        self._book_wire(req.tag, server, done - now)
         nxt = self._free_server(server)
         for r in members:
             r._complete()

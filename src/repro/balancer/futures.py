@@ -78,12 +78,34 @@ def as_completed(
             yield r
 
 
-def gather(requests: Sequence[Request], timeout: Optional[float] = None) -> List[Request]:
+def gather(
+    requests: Sequence[Request],
+    timeout: Optional[float] = None,
+    *,
+    cancel_pending: bool = False,
+) -> List[Request]:
     """Wait for *all* requests; returns them in input order.
 
     Convenience over :func:`as_completed` for barrier-style clients
     (``submit_many`` + ``gather`` is the batch round trip).
+
+    ``timeout`` bounds the total wait; on expiry :class:`TimeoutError` is
+    raised.  With ``cancel_pending`` the deadline also *reclaims* what it
+    can before raising: every request still sitting in the arrival queue
+    is cancelled (it completes with
+    :class:`~repro.balancer.types.RequestCancelled` set as its error) so
+    the balancer never evaluates work whose client has given up.
+    Requests already in flight on a server cannot be recalled across a
+    socket — they are abandoned, finishing in the background with their
+    results discarded.
     """
-    for _ in as_completed(requests, timeout):
-        pass
+    try:
+        for _ in as_completed(requests, timeout):
+            pass
+    except TimeoutError:
+        if cancel_pending:
+            for r in requests:
+                if not r.done.is_set():
+                    r.cancel()
+        raise
     return list(requests)

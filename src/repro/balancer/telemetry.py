@@ -154,6 +154,8 @@ class Telemetry:
         self._tag_tokens: Dict[str, int] = {}
         self._tag_done: Dict[str, int] = {}
         self._occupancy: Dict[str, Dict[str, float]] = {}
+        # remote serving: per-(server, tag) wire vs service split
+        self._wire: Dict[tuple, Dict[str, float]] = {}
         self._ewma_alpha = ewma_alpha
         # streaming idle-time aggregates (exact mode derives from _history)
         self._idle_n = 0
@@ -232,6 +234,22 @@ class Telemetry:
                     self._book_idle_locked(r)
             elif kind == "tokens":
                 self._tag_tokens[a] = self._tag_tokens.get(a, 0) + b
+            elif kind == "wire":
+                wire_s, service_s = b
+                w = self._wire.get(a)
+                if w is None:
+                    w = self._wire[a] = {
+                        "n": 0, "wire_s": 0.0, "service_s": 0.0,
+                        "wire_ewma": wire_s, "service_ewma": service_s,
+                    }
+                al = self._ewma_alpha
+                w["n"] += 1
+                w["wire_s"] += wire_s
+                w["service_s"] += service_s
+                w["wire_ewma"] = (1 - al) * w["wire_ewma"] + al * wire_s
+                w["service_ewma"] = (
+                    (1 - al) * w["service_ewma"] + al * service_s
+                )
             elif kind == "occupancy":
                 occupied, capacity = b
                 occ = self._occupancy.get(a)
@@ -308,6 +326,21 @@ class Telemetry:
         into a per-server EWMA + running mean — the 'how full does the
         fused step run' metric BENCH_serve.json reports."""
         self._pending.append(("occupancy", server, (occupied, capacity)))
+        self._maybe_fold()
+
+    def record_wire(
+        self, server: str, tag: str, wire_s: float, service_s: float
+    ) -> None:
+        """Book one remote call's wire/service split for ``(server, tag)``.
+
+        ``service_s`` is the shell-reported handler seconds, ``wire_s``
+        the remainder of the observed round trip (serialization + socket
+        + queueing inside the remote shell).  Folded into per-(server,
+        tag) totals and EWMAs; ``summary()['wire_split']`` reports them —
+        the number that shows whether the wire or the solver is the
+        bottleneck of a distributed run.
+        """
+        self._pending.append(("wire", (server, tag), (wire_s, service_s)))
         self._maybe_fold()
 
     def record_failure(self, server: Server) -> None:
@@ -436,6 +469,16 @@ class Telemetry:
                 t: dict(h) for t, h in self._batch_hist.items()
             }
             stats["tag_tokens"] = dict(self._tag_tokens)
+            stats["wire_split"] = {
+                f"{server}:{tag}": {
+                    "calls": int(w["n"]),
+                    "wire_s": w["wire_s"],
+                    "service_s": w["service_s"],
+                    "wire_ewma_s": w["wire_ewma"],
+                    "service_ewma_s": w["service_ewma"],
+                }
+                for (server, tag), w in self._wire.items()
+            }
             stats["slot_occupancy"] = {
                 name: {
                     "mean": occ["slot_steps"] / (occ["steps"] * occ["capacity"])
@@ -453,18 +496,26 @@ class Telemetry:
         """Per-tag serving/runtime rows for human-readable reports.
 
         One row per tag ever completed: request count, EWMA service time,
-        and the generated-token counter (0 for non-serving tags) — the
-        serve driver prints this next to the paper's idle-time columns.
+        the generated-token counter (0 for non-serving tags), and — for
+        tags served by remote servers — the EWMA wire seconds per call
+        (None for purely local tags).
         """
         with self._lock:
             self._fold_locked()
             tags = sorted(set(self._tag_done) | set(self._tag_tokens))
+            wire_by_tag: Dict[str, float] = {}
+            for (_server, tag), w in self._wire.items():
+                # several replicas may serve one tag: report the worst EWMA
+                prev = wire_by_tag.get(tag)
+                if prev is None or w["wire_ewma"] > prev:
+                    wire_by_tag[tag] = w["wire_ewma"]
             return [
                 {
                     "tag": tag,
                     "n_done": self._tag_done.get(tag, 0),
                     "ewma_s": self._tag_ewma.get(tag),
                     "tokens": self._tag_tokens.get(tag, 0),
+                    "wire_ewma_s": wire_by_tag.get(tag),
                 }
                 for tag in tags
             ]

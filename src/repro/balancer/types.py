@@ -64,6 +64,13 @@ class Server:
     # Continuous-batching servers (DecodePool) take the dispatcher's
     # token-boundary dispatch edge instead of fn/batch_call.
     continuous = False
+    # Remote servers (repro.net) evaluate across a socket: the dispatcher
+    # splits their completions into wire time vs remote service time using
+    # last_service_s (the shell-reported handler seconds of the most
+    # recent call — safe as a plain attribute because a server is driven
+    # by exactly one worker at a time).
+    remote = False
+    last_service_s: Optional[float] = None
 
     def __init__(
         self,
@@ -493,11 +500,30 @@ class Request:        # numpy thetas ("truth value ambiguous" in queue.remove)
     def __post_init__(self) -> None:
         self._callbacks: List[Callable[["Request"], None]] = []
         self._cb_lock = threading.Lock()
+        # Set by the dispatcher at admission; lets cancel() reach back
+        # into the owning balancer without a hard reference cycle here.
+        self._cancel_hook: Optional[Callable[["Request"], bool]] = None
 
     @property
     def queue_delay(self) -> float:
         """Time between arrival and dispatch — the paper's 'idle time'."""
         return self.dispatched_at - self.arrived_at
+
+    def cancel(self) -> bool:
+        """Cancel this request if it is still *queued* (client-side
+        deadline support: see :func:`repro.balancer.futures.gather`).
+
+        Returns True when the request was removed from the queue — it
+        then completes immediately with :class:`RequestCancelled` set as
+        its error.  Returns False when it already completed or is
+        in-flight on a server (an in-flight evaluation cannot be recalled
+        across a socket; callers *abandon* it instead — the result is
+        discarded on completion).
+        """
+        hook = self._cancel_hook
+        if hook is None or self.done.is_set():
+            return False
+        return hook(self)
 
     @property
     def service_time(self) -> float:
@@ -536,3 +562,7 @@ class Request:        # numpy thetas ("truth value ambiguous" in queue.remove)
 
 class ServerDiedError(RuntimeError):
     """A request exhausted its retries because its servers kept dying."""
+
+
+class RequestCancelled(RuntimeError):
+    """A queued request was cancelled by its client (deadline/cancel)."""

@@ -64,6 +64,20 @@ class MLDAWorkloadConfig:
     device_resident: bool = False
     device_chunk: int = 16
     mesh_devices: Optional[int] = None
+    # remote serving (repro.net, DESIGN.md §11): when remote_servers names
+    # 'host:port' endpoints (each a launch/export.py ServerShell), the
+    # example builds RemoteBatchServer replicas against them instead of
+    # in-process pools.  remote_binary picks the zero-copy framing mode
+    # (False = UM-Bridge JSON interop); remote_connections sizes the
+    # pipelined connection pool per endpoint; remote_timeout_s bounds each
+    # round trip; remote_retries is the transport-level redial budget
+    # (the dispatcher's max_retries separately bounds requeues after a
+    # remote server is declared dead).
+    remote_servers: Tuple[str, ...] = ()
+    remote_binary: bool = True
+    remote_connections: int = 2
+    remote_timeout_s: float = 30.0
+    remote_retries: int = 2
 
     @property
     def batchable_levels(self) -> Tuple[int, ...]:
@@ -83,6 +97,16 @@ class MLDAWorkloadConfig:
         if self.exact_telemetry:
             kwargs["exact_telemetry"] = True
         return kwargs
+
+    def remote_kwargs(self) -> Dict[str, object]:
+        """Transport construction kwargs for the remote endpoints
+        (:func:`repro.net.make_transport` keywords)."""
+        return {
+            "binary": self.remote_binary,
+            "n_connections": self.remote_connections,
+            "read_timeout": self.remote_timeout_s,
+            "retries": self.remote_retries,
+        }
 
 
 PAPER = MLDAWorkloadConfig(

@@ -1,66 +1,20 @@
-"""Backward-compatibility shim: the balancer now lives in ``repro.balancer``.
+"""DEPRECATED shim: the balancer lives in :mod:`repro.balancer`.
 
-The seed's 400-line monolith (queueing + policy + execution + telemetry in
-one class) was split into a package (DESIGN.md §2-3):
+Every name re-exported here is available from ``repro.balancer`` (and
+the common subset from ``repro.core``); importing this module emits a
+:class:`DeprecationWarning` and will stop working in a future revision.
 
-* ``repro.balancer.types``      — ``Server`` / ``Request`` / ``ServerStats``;
-* ``repro.balancer.policies``   — pluggable ``SchedulingPolicy`` registry
-  (``fifo`` | ``round_robin`` | ``least_loaded`` | ``power_of_two`` |
-  ``cost_aware``);
-* ``repro.balancer.dispatcher`` — event-driven ``LoadBalancer`` core
-  (single dispatch loop + fixed worker pool, no thread-per-request);
-* ``repro.balancer.telemetry``  — Figs. 8-9 bookkeeping + runtime EWMAs.
-
-Existing imports keep working:
-
-    from repro.core.balancer import LoadBalancer, Server
+    from repro.core.balancer import LoadBalancer   # old
+    from repro.balancer import LoadBalancer        # new
 """
 from __future__ import annotations
 
-from repro.balancer import (  # noqa: F401 - re-exports
-    BatchServer,
-    CostAwarePolicy,
-    FifoPolicy,
-    LeastLoadedPolicy,
-    LoadBalancer,
-    POLICIES,
-    PolicyContext,
-    PowerOfTwoPolicy,
-    Request,
-    RoundRobinPolicy,
-    SchedulingPolicy,
-    Server,
-    ServerDiedError,
-    ServerStats,
-    Telemetry,
-    as_completed,
-    available_policies,
-    create_policy,
-    gather,
-    register_policy,
-    wait_any,
-)
+import warnings
 
-__all__ = [
-    "BatchServer",
-    "CostAwarePolicy",
-    "FifoPolicy",
-    "LeastLoadedPolicy",
-    "LoadBalancer",
-    "POLICIES",
-    "PolicyContext",
-    "PowerOfTwoPolicy",
-    "Request",
-    "RoundRobinPolicy",
-    "SchedulingPolicy",
-    "Server",
-    "ServerDiedError",
-    "ServerStats",
-    "Telemetry",
-    "as_completed",
-    "available_policies",
-    "create_policy",
-    "gather",
-    "register_policy",
-    "wait_any",
-]
+from repro.balancer import *  # noqa: F401,F403 - deprecated re-export
+
+warnings.warn(
+    "repro.core.balancer is deprecated; import from repro.balancer instead",
+    DeprecationWarning,
+    stacklevel=2,
+)

@@ -11,7 +11,7 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
-from .balancer import LoadBalancer
+from repro.balancer import LoadBalancer
 from .mlda import MLDASampler
 
 

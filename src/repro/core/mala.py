@@ -19,7 +19,7 @@ from typing import Callable, Optional, Tuple
 
 import numpy as np
 
-from .balancer import LoadBalancer
+from repro.balancer import LoadBalancer
 from .mh import ChainStats
 
 

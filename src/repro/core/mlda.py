@@ -34,7 +34,7 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tupl
 
 import numpy as np
 
-from .balancer import LoadBalancer, Server  # Server: quoted annotations
+from repro.balancer import LoadBalancer, Server  # Server: quoted annotations
 from .mh import Proposal, mh_step_steps
 
 

@@ -5,7 +5,7 @@ from .scenario import (
     make_hierarchy,
     train_level0_gp,
 )
-from .servers import make_level_servers
+from .servers import make_level_servers, make_remote_level_servers
 from .solver import SWEConfig, SWEState, lake_at_rest_error, make_solver, step
 
 __all__ = [
@@ -16,6 +16,7 @@ __all__ = [
     "lake_at_rest_error",
     "make_hierarchy",
     "make_level_servers",
+    "make_remote_level_servers",
     "make_solver",
     "step",
     "train_level0_gp",

@@ -4,7 +4,7 @@ import time
 
 import pytest
 
-from repro.core.balancer import LoadBalancer, Server
+from repro.balancer import LoadBalancer, Server
 
 
 def make_worker(duration=0.0, fail=False):

@@ -1,7 +1,7 @@
 """MALA (paper §7 future work: gradient-based MCMC on the balancer)."""
 import numpy as np
 
-from repro.core.balancer import LoadBalancer, Server
+from repro.balancer import LoadBalancer, Server
 from repro.core.mala import BalancedGradDensity, mala
 
 

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import HealthCheck, given, settings
 
-from repro.core.balancer import LoadBalancer, Server
+from repro.balancer import LoadBalancer, Server
 from repro.core.gp import GPParams, matern52
 from repro.models.chunked_attention import attention_chunked
 from repro.kernels.flash_attention.ref import attention_ref
