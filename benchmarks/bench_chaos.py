@@ -1,0 +1,422 @@
+"""Fault-tolerance benchmark: seeded chaos storms against the serving stack.
+
+The robustness subsystem (DESIGN.md §12) claims three things: no request
+submitted to a self-healing pool is ever *lost* (every one resolves to a
+correct result or a typed error), a pool whose servers crash recovers to
+full size without operator action, and overload is shed at admission
+instead of queuing unboundedly.  This bench drives all three under a
+deterministic :class:`~repro.balancer.FaultPlan` storm and records the
+evidence in ``BENCH_chaos.json``:
+
+* **storm**     — an in-process batch pool under crash + straggler + NaN
+  injection with health monitoring on: every request must come back as
+  its exact fp32 result or the per-member ``FloatingPointError`` the
+  injected NaN maps to, and the pool must return to full size;
+* **wire**      — the same accounting through a :class:`ServerShell`
+  whose client transport suffers connection drops (redial/backoff path)
+  and partitions (remote-server-death path);
+* **admission** — a deliberately overloaded single-server pool with
+  ``max_queue_per_tag`` set: excess submissions must be rejected with
+  ``QueueFull`` while every admitted request still completes;
+* **mlda**      — the Tōhoku MLDA smoke workload (the paper's own
+  hierarchy: GP surrogate + coarse/fine SWE solvers) sampled end to end
+  while scheduled crashes kill level servers mid-run; the ensemble must
+  deliver the full sample tensor with zero failed chains.
+
+``--smoke`` gates CI: zero lost requests across every leg, full pool
+recovery, zero failed MLDA chains, and zero leaked threads.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, List
+
+import numpy as np
+
+from repro.balancer import (
+    BatchServer,
+    FaultPlan,
+    HealthConfig,
+    LoadBalancer,
+    QueueFull,
+    Server,
+    gather,
+)
+
+JSON_PATH = os.environ.get(
+    "BENCH_CHAOS_JSON",
+    os.path.join(os.path.dirname(__file__), "BENCH_chaos.json"),
+)
+
+CHAOS_SEED = 20260809
+DIM = 64
+N_SERVERS = 4
+N_CLIENTS = 4
+MAX_BATCH = 4
+RECOVERY_TIMEOUT_S = 10.0
+
+# Aggressive health cadence: CI wants recovery in milliseconds, not the
+# production default's tens of milliseconds per probe round.
+HEALTH = dict(
+    probe_interval_s=0.005, quarantine_backoff_s=0.005, probation_s=0.02
+)
+
+
+def forward(stacked: np.ndarray) -> np.ndarray:
+    stacked = np.asarray(stacked, dtype=np.float32)
+    return 2.0 * stacked
+
+
+def make_pool(check_finite: bool = True) -> List[BatchServer]:
+    return [
+        BatchServer(
+            forward, name=f"chaos-{i}", capacity_tags=("fwd",),
+            max_batch=MAX_BATCH, check_finite=check_finite,
+        )
+        for i in range(N_SERVERS)
+    ]
+
+
+def _await_recovery(servers) -> float:
+    """Seconds until every server is alive again (gate: full pool size)."""
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < RECOVERY_TIMEOUT_S:
+        if all(not s.dead for s in servers):
+            return time.monotonic() - t0
+        time.sleep(0.01)
+    raise SystemExit(
+        "pool never recovered to full size: dead="
+        + repr([s.name for s in servers if s.dead])
+    )
+
+
+def _account(reqs, thetas) -> Dict[str, int]:
+    """Typed-outcome accounting: ok / nan_member / lost.
+
+    A request is *lost* if it resolved to anything other than its exact
+    fp32 result or the ``FloatingPointError`` an injected NaN maps to on
+    a finite-checked server.
+    """
+    counts = {"ok": 0, "nan_member": 0, "lost": 0}
+    for i, r in enumerate(reqs):
+        if r.error is None:
+            expect = forward(thetas[i][None])[0]
+            if np.asarray(r.result).tobytes() == expect.tobytes():
+                counts["ok"] += 1
+            else:
+                counts["lost"] += 1
+        elif isinstance(r.error, FloatingPointError):
+            counts["nan_member"] += 1
+        else:
+            counts["lost"] += 1
+    return counts
+
+
+def _drive_storm(lb: LoadBalancer, thetas: np.ndarray):
+    """N_CLIENTS threads of coalescable submits; returns requests in order."""
+    per_client = len(thetas) // N_CLIENTS
+    all_reqs: List[List] = [[] for _ in range(N_CLIENTS)]
+
+    def client(c: int) -> None:
+        chunk = thetas[c * per_client:(c + 1) * per_client]
+        for k in range(0, len(chunk), MAX_BATCH):
+            all_reqs[c].extend(
+                lb.submit_many(
+                    list(chunk[k:k + MAX_BATCH]), tag="fwd", batchable=True
+                )
+            )
+
+    threads = [
+        threading.Thread(target=client, args=(c,)) for c in range(N_CLIENTS)
+    ]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    reqs = [r for client_reqs in all_reqs for r in client_reqs]
+    gather(reqs, timeout=120)
+    wall = time.perf_counter() - t0
+    return reqs, wall
+
+
+def run_storm(n_requests: int) -> Dict[str, Any]:
+    """In-process pool under crash/straggler/NaN injection, health on."""
+    plan = FaultPlan(
+        CHAOS_SEED, p_crash=0.02, p_straggle=0.05, p_nan=0.01,
+        straggle_s=0.001, down_s=0.02,
+        # Scheduled crashes guarantee the storm blows even at smoke sizes
+        # (the probabilistic draws alone could miss on a short run).
+        crash_on={"chaos-0": [2], "chaos-2": [5]},
+    )
+    servers = plan.wrap_all(make_pool())
+    lb = LoadBalancer(
+        servers, health=HealthConfig(**HEALTH), max_retries=200,
+        batch_window_s=0.001, max_batch=MAX_BATCH,
+    )
+    thetas = np.random.default_rng(0).random((n_requests, DIM), dtype=np.float32)
+    try:
+        reqs, wall = _drive_storm(lb, thetas)
+        counts = _account(reqs, thetas)
+        recovery_s = _await_recovery(servers)
+        summary = lb.summary()
+    finally:
+        lb.shutdown()
+    faults = plan.counts()
+    return {
+        "n_requests": n_requests,
+        "rps": n_requests / wall,
+        "outcomes": counts,
+        "injected": faults,
+        "server_deaths": sum(
+            summary["fault_counters"].get("server_death", {}).values()
+        ),
+        "readmissions": sum(
+            summary["fault_counters"].get("readmission", {}).values()
+        ),
+        "recovery_s": recovery_s,
+    }
+
+
+def run_wire(n_requests: int) -> Dict[str, Any]:
+    """The storm through a ServerShell with drops/partitions on the wire."""
+    from repro.net import ServerShell, make_transport, remote_servers_for
+
+    plan = FaultPlan(CHAOS_SEED, p_drop=0.05)
+    shell = ServerShell(
+        make_pool(check_finite=False), name="bench-chaos",
+        max_workers=N_SERVERS,
+    ).start()
+    tr = plan.wrap_transport(
+        make_transport(shell, binary=True, n_connections=N_CLIENTS), "wire"
+    )
+    servers = remote_servers_for(tr, max_batch=MAX_BATCH)
+    lb = LoadBalancer(
+        servers, health=HealthConfig(**HEALTH), max_retries=200,
+        batch_window_s=0.001, max_batch=MAX_BATCH,
+    )
+    thetas = np.random.default_rng(1).random((n_requests, DIM), dtype=np.float32)
+    try:
+        reqs, wall = _drive_storm(lb, thetas)
+        counts = _account(reqs, thetas)
+        recovery_s = _await_recovery(servers)
+        summary = lb.summary()
+    finally:
+        lb.shutdown()
+        tr.close()
+        shell.stop()
+    return {
+        "n_requests": n_requests,
+        "rps": n_requests / wall,
+        "outcomes": counts,
+        "injected": plan.counts(),
+        "server_deaths": sum(
+            summary["fault_counters"].get("server_death", {}).values()
+        ),
+        "readmissions": sum(
+            summary["fault_counters"].get("readmission", {}).values()
+        ),
+        "recovery_s": recovery_s,
+    }
+
+
+def run_admission(n_requests: int) -> Dict[str, Any]:
+    """Overload a single slow server with a bounded queue: excess submits
+    must shed at admission (``QueueFull``), admitted ones must complete."""
+    depth = 8
+    slow = Server(
+        lambda x: (time.sleep(0.002), 2.0 * x)[1], name="slow",
+        capacity_tags=("fwd",),
+    )
+    lb = LoadBalancer([slow], max_queue_per_tag=depth)
+    try:
+        # A shed submission resolves immediately with error=QueueFull (the
+        # admission decision is taken under the submit lock, never queued).
+        reqs = [lb.submit_async(float(i), tag="fwd") for i in range(n_requests)]
+        gather(reqs, timeout=60)
+        shed = sum(1 for r in reqs if isinstance(r.error, QueueFull))
+        lost = sum(
+            1 for r in reqs
+            if r.error is not None and not isinstance(r.error, QueueFull)
+        )
+        summary = lb.summary()
+    finally:
+        lb.shutdown()
+    return {
+        "n_requests": n_requests,
+        "queue_depth": depth,
+        "admitted": n_requests - shed,
+        "shed": shed,
+        "lost": lost,
+        "shed_counter": sum(
+            summary["fault_counters"].get("queue_full", {}).values()
+        ),
+    }
+
+
+def run_mlda(smoke: bool) -> Dict[str, Any]:
+    """Tōhoku MLDA under a seeded fault storm with self-healing + retries.
+
+    The workload is bench_mlda's smoke hierarchy (GP surrogate + real
+    coarse/fine SWE solvers) with the config's fault-tolerance knobs
+    switched on; scheduled crashes kill a coarse and a fine server
+    mid-run.  The gate: the full ``(n_chains, n_fine, 2)`` sample tensor
+    with zero failed chains, and the pool back at full size.
+    """
+    try:
+        from bench_mlda import SMOKE, build
+    except ImportError:  # imported as a package module (benchmarks.run)
+        from benchmarks.bench_mlda import SMOKE, build
+
+    from repro.core import GaussianRandomWalk, balanced_mlda
+    from repro.swe import make_level_servers
+
+    w = dataclasses.replace(
+        SMOKE,
+        name="chaos-smoke",
+        n_chains=3 if smoke else SMOKE.n_chains,
+        n_fine_samples=5 if smoke else SMOKE.n_fine_samples,
+        subchain_lengths=(2, 2) if smoke else SMOKE.subchain_lengths,
+        batch_solves=False,
+        self_healing=True,
+        probe_interval_s=0.01,
+        max_restarts=2,
+        checkpoint_every=2,
+    )
+    prob, gp, f_coarse, f_fine = build(w)
+    servers = make_level_servers(w, gp, f_coarse, f_fine)
+    plan = FaultPlan(
+        CHAOS_SEED, p_crash=0.01, p_straggle=0.05, straggle_s=0.002,
+        down_s=0.05,
+        crash_on={servers[1].name: [1], servers[-1].name: [2]},
+    )
+    plan.wrap_all(servers)
+    runner, lb = balanced_mlda(
+        servers,
+        prob.log_likelihood,
+        prob.log_prior,
+        GaussianRandomWalk(w.rw_step_km),
+        list(w.subchain_lengths),
+        policy=w.balancer_policy,
+        n_chains=w.n_chains,
+        ensemble_seed=w.ensemble_seed,
+        speculative=w.speculative_prefetch,
+        as_runner=True,
+        max_retries=50,
+        **w.balancer_kwargs(),
+        **w.runner_kwargs(),
+    )
+    t0 = time.monotonic()
+    try:
+        result = runner.run(
+            lambda c, rng: prob.sample_prior(rng)[0] * 0.5, w.n_fine_samples
+        )
+        wall = time.monotonic() - t0
+        recovery_s = _await_recovery(servers)
+        summary = lb.summary()
+    finally:
+        lb.shutdown()
+    return {
+        "n_chains": w.n_chains,
+        "n_fine_samples": w.n_fine_samples,
+        "wall_s": wall,
+        "samples_shape": list(result.chains.shape),
+        "failed_chains": sorted(result.failures),
+        "restarts": {str(k): v for k, v in result.restarts.items()},
+        "injected": plan.counts(),
+        "server_deaths": sum(
+            summary["fault_counters"].get("server_death", {}).values()
+        ),
+        "readmissions": sum(
+            summary["fault_counters"].get("readmission", {}).values()
+        ),
+        "recovery_s": recovery_s,
+    }
+
+
+def main(smoke: bool = False, skip_mlda: bool = False) -> List[str]:
+    baseline_threads = threading.active_count()
+    n_requests = 256 if smoke else 2048
+
+    storm = run_storm(n_requests)
+    wire = run_wire(n_requests // 2)
+    admission = run_admission(64)
+    mlda = None if skip_mlda else run_mlda(smoke)
+
+    time.sleep(0.2)  # let probe/reader threads finish parking out
+    leaked = threading.active_count() - baseline_threads
+
+    result = {
+        "benchmark": "chaos",
+        "seed": CHAOS_SEED,
+        "smoke": smoke,
+        "storm": storm,
+        "wire": wire,
+        "admission": admission,
+        "mlda": mlda,
+        "leaked_threads": leaked,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True, default=float)
+
+    rows = [
+        f"chaos_storm_rps,{storm['rps']:.0f},req/s",
+        f"chaos_storm_lost,{storm['outcomes']['lost']},count",
+        f"chaos_storm_deaths,{storm['server_deaths']},count",
+        f"chaos_storm_readmissions,{storm['readmissions']},count",
+        f"chaos_storm_recovery,{storm['recovery_s'] * 1e3:.0f},ms",
+        f"chaos_wire_lost,{wire['outcomes']['lost']},count",
+        f"chaos_wire_faults,{sum(wire['injected'].values())},count",
+        f"chaos_admission_shed,{admission['shed']},count",
+        f"chaos_admission_lost,{admission['lost']},count",
+        f"chaos_leaked_threads,{leaked},count",
+        f"chaos_json,{JSON_PATH},path",
+    ]
+    if mlda is not None:
+        rows[-1:-1] = [
+            f"chaos_mlda_failed_chains,{len(mlda['failed_chains'])},count",
+            f"chaos_mlda_deaths,{mlda['server_deaths']},count",
+            f"chaos_mlda_wall,{mlda['wall_s']:.1f},s",
+        ]
+
+    # -- gates (the subsystem's contract; see module docstring) --------------
+    lost = storm["outcomes"]["lost"] + wire["outcomes"]["lost"]
+    if lost:
+        raise SystemExit(f"chaos storm lost {lost} requests")
+    if storm["server_deaths"] < 1 or storm["readmissions"] < 1:
+        raise SystemExit(
+            "storm too quiet: expected at least one server death and one "
+            f"readmission, got {storm['server_deaths']}/{storm['readmissions']}"
+        )
+    if admission["shed"] < 1 or admission["lost"]:
+        raise SystemExit(
+            f"admission control failed: shed={admission['shed']} "
+            f"lost={admission['lost']}"
+        )
+    if mlda is not None:
+        want = [mlda["n_chains"], mlda["n_fine_samples"], 2]
+        if mlda["failed_chains"] or mlda["samples_shape"] != want:
+            raise SystemExit(
+                f"MLDA under chaos incomplete: failed={mlda['failed_chains']} "
+                f"shape={mlda['samples_shape']} (want {want})"
+            )
+    if leaked != 0:
+        raise SystemExit(f"chaos bench leaked {leaked} threads")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced size + CI gates (zero lost requests, "
+                         "full pool recovery, zero leaked threads)")
+    ap.add_argument("--skip-mlda", action="store_true",
+                    help="skip the Tōhoku MLDA leg (no SWE/GP build)")
+    args = ap.parse_args()
+    for row in main(smoke=args.smoke, skip_mlda=args.skip_mlda):
+        print(row)

@@ -11,6 +11,7 @@ Prints ``name,value,unit`` CSV rows:
   * bench_gp        -> GP surrogate accuracy/fit time (paper §6.1)
   * bench_serve     -> continuous-batching LM serving vs generation baseline
   * bench_remote    -> network serving: binary framing vs UM-Bridge JSON
+  * bench_chaos     -> fault-tolerant serving under seeded chaos storms
   * roofline        -> per-cell roofline fractions from the dry-run JSONs
 """
 from __future__ import annotations
@@ -27,13 +28,15 @@ def main() -> None:
     ap.add_argument(
         "--only", default="",
         help="comma-separated subset "
-             "(balancer,dispatch,mlda,batch,kernels,gp,serve,remote,roofline)"
+             "(balancer,dispatch,mlda,batch,kernels,gp,serve,remote,chaos,"
+             "roofline)"
     )
     args = ap.parse_args()
 
     from benchmarks import (
         bench_balancer,
         bench_batch,
+        bench_chaos,
         bench_dispatch,
         bench_gp,
         bench_kernels,
@@ -52,6 +55,9 @@ def main() -> None:
         "batch": lambda: bench_batch.main(smoke=True)[0],
         "serve": lambda: bench_serve.main(smoke=True)[0],
         "remote": lambda: bench_remote.main(smoke=True),
+        # --fast keeps the chaos gates but skips its Tōhoku MLDA leg
+        # (the one section of it that needs the SWE/GP build).
+        "chaos": lambda: bench_chaos.main(smoke=True, skip_mlda=args.fast),
         "roofline": roofline.main,
     }
     if args.fast:

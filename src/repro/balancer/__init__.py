@@ -17,13 +17,21 @@ Layout (DESIGN.md §2-3):
   (``wait_any`` / ``as_completed`` / ``gather``) so one thread can keep
   many requests outstanding (the ensemble driver's contract);
 * :mod:`repro.balancer.telemetry`  — idle-time/timeline bookkeeping and
-  the runtime EWMA cost model, behind its own lock.
+  the runtime EWMA cost model, behind its own lock;
+* :mod:`repro.balancer.health`     — self-healing pools: quarantine /
+  probe / re-admission lifecycle and per-(server, tag) circuit breakers
+  (opt-in via ``LoadBalancer(health=...)``);
+* :mod:`repro.balancer.faults`     — the deterministic chaos harness:
+  seeded :class:`FaultPlan` injection of crashes, stragglers, NaN
+  payloads and connection drops for fault-tolerance tests/benchmarks.
 
 ``repro.core.balancer`` survives only as a deprecated one-line stub that
 re-exports this package with a :class:`DeprecationWarning`.
 """
 from .dispatcher import LoadBalancer
+from .faults import FaultPlan, InjectedCrash, InjectedDrop, InjectedFault
 from .futures import as_completed, gather, wait_any
+from .health import HealthConfig, HealthMonitor
 from .policies import (
     CostAwarePolicy,
     FifoPolicy,
@@ -41,10 +49,13 @@ from .queueing import FreeServerIndex, IndexedQueue
 from .telemetry import P2Quantile, Telemetry
 from .types import (
     BatchServer,
+    DeadlineExceeded,
     DecodeHandoff,
     DecodePool,
     DecodeResult,
     DecodeSlot,
+    PoisonRequestError,
+    QueueFull,
     Request,
     RequestCancelled,
     Server,
@@ -56,19 +67,28 @@ from .types import (
 __all__ = [
     "BatchServer",
     "CostAwarePolicy",
+    "DeadlineExceeded",
     "DecodeHandoff",
     "DecodePool",
     "DecodeResult",
     "DecodeSlot",
+    "FaultPlan",
     "FifoPolicy",
     "FreeServerIndex",
+    "HealthConfig",
+    "HealthMonitor",
     "IndexedQueue",
+    "InjectedCrash",
+    "InjectedDrop",
+    "InjectedFault",
     "LeastLoadedPolicy",
     "LoadBalancer",
     "P2Quantile",
     "POLICIES",
+    "PoisonRequestError",
     "PolicyContext",
     "PowerOfTwoPolicy",
+    "QueueFull",
     "Request",
     "RequestCancelled",
     "RoundRobinPolicy",

@@ -47,10 +47,19 @@ import time
 from collections import deque
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from .health import HealthConfig, HealthMonitor
 from .policies import PolicyContext, SchedulingPolicy, create_policy
 from .queueing import FreeServerIndex, IndexedQueue
 from .telemetry import Telemetry
-from .types import Request, RequestCancelled, Server, ServerDiedError
+from .types import (
+    DeadlineExceeded,
+    PoisonRequestError,
+    QueueFull,
+    Request,
+    RequestCancelled,
+    Server,
+    ServerDiedError,
+)
 
 
 class _BatchWaiter:
@@ -94,6 +103,9 @@ class LoadBalancer:
         max_batch: int = 256,
         max_workers: Optional[int] = None,
         exact_telemetry: bool = False,
+        health: "Optional[HealthConfig] | bool" = None,
+        poison_threshold: Optional[int] = None,
+        max_queue_per_tag: Optional[int] = None,
     ) -> None:
         self._servers: List[Server] = list(servers)
         self._mutex = threading.Lock()
@@ -122,6 +134,19 @@ class LoadBalancer:
         self.batch_window_frac = batch_window_frac
         self.max_batch = max_batch
         self.max_workers = max_workers
+        # Fault tolerance (DESIGN.md §12) — all three default OFF, keeping
+        # the default engine byte-identical to the pre-fault-tolerance one:
+        # ``health`` enables quarantine/probing/re-admission (True -> default
+        # HealthConfig), ``poison_threshold`` fails a request that killed
+        # that many *distinct* servers instead of letting it exterminate the
+        # pool, ``max_queue_per_tag`` bounds per-tag queue depth (admission
+        # control: excess submissions are shed with ``QueueFull``).
+        if health is True:
+            health = HealthConfig()
+        self._health = HealthMonitor(self, health) if health else None
+        self.poison_threshold = poison_threshold
+        self.max_queue_per_tag = max_queue_per_tag
+        self._has_deadlines = False  # any request ever carried a deadline
         self._shutdown = False
         self._started = False
         self._unservable_dirty = False  # set when a server dies / retires
@@ -140,6 +165,10 @@ class LoadBalancer:
     @property
     def telemetry(self) -> Telemetry:
         return self._telemetry
+
+    @property
+    def health(self) -> Optional[HealthMonitor]:
+        return self._health
 
     @property
     def servers(self) -> List[Server]:
@@ -162,6 +191,7 @@ class LoadBalancer:
             for s in self._servers:
                 if s.name == name:
                     s.dead = True
+                    s.lifecycle = "retired"  # terminal: never re-admitted
                     self._free.mark_dead(s)
             self._unservable_dirty = True
             self._cv.notify()  # wake the dispatcher for the dirty sweep
@@ -169,6 +199,47 @@ class LoadBalancer:
         # workers so the now-excess ones park out (see _worker_loop).
         with self._work_cv:
             self._work_cv.notify_all()
+
+    def readmit_server(self, server: Server) -> bool:
+        """Re-admit a quarantined server after a passing health probe.
+
+        The inverse of the death transition: the server re-enters the free
+        index (appended to pool order — see :meth:`FreeServerIndex.add`),
+        the worker pool re-grows to match, and any requests its return
+        makes dispatchable go out immediately.  The server lands in
+        ``probation``; the :class:`~repro.balancer.health.HealthMonitor`
+        promotes it to ``live`` after a clean probation window.  Returns
+        False (and does nothing) under shutdown or for retired servers.
+        """
+        pairs: List[Tuple[Request, Server]] = []
+        with self._cv:
+            if self._shutdown or server.lifecycle == "retired":
+                return False
+            if not server.dead:
+                return True  # double-probe race: already re-admitted
+            server.dead = False
+            server.busy = False
+            server.lifecycle = "probation"
+            self._free.add(server)
+            if self._started:
+                self._grow_workers_locked()
+            if self._queue:
+                pairs = self._drain_ready_locked()
+            self._cv.notify()
+        with self._work_cv:
+            self._work_cv.notify_all()
+        for tag in list(server.capacity_tags) or [""]:
+            self._telemetry.record_fault("readmission", tag)
+        if pairs:
+            self._hand_off(pairs)
+        return True
+
+    def kick(self) -> None:
+        """Wake the dispatch loop to retake decisions whose inputs changed
+        outside the queue/free events — e.g. a circuit breaker expiring
+        re-opens routes for tags that were skipped while it was open."""
+        with self._cv:
+            self._cv.notify()
 
     # -- engine lifecycle ----------------------------------------------------
     def _n_workers_wanted(self) -> int:
@@ -185,6 +256,8 @@ class LoadBalancer:
         )
         self._dispatcher.start()
         self._grow_workers_locked()
+        if self._health is not None:
+            self._health.start()
 
     def _grow_workers_locked(self) -> None:
         # _n_live_workers (not len(_workers)) is the pool size: workers that
@@ -217,6 +290,11 @@ class LoadBalancer:
                     w.event.set()
         with self._work_cv:
             self._work_cv.notify_all()
+        if self._health is not None:
+            # Before joining the workers: a mid-probe monitor tick calling
+            # readmit_server sees _shutdown and backs off, then the join
+            # guarantees no re-admission mutates the pool after the sweeps.
+            self._health.stop()
         if self._dispatcher is not None and self._dispatcher is not threading.current_thread():
             self._dispatcher.join()
         for t in self._workers:
@@ -241,25 +319,67 @@ class LoadBalancer:
         self.shutdown()
 
     # -- client API ----------------------------------------------------------
-    def submit(self, theta, *, tag: str = "", batchable: bool = False) -> Any:
+    def submit(
+        self,
+        theta,
+        *,
+        tag: str = "",
+        batchable: bool = False,
+        deadline_s: Optional[float] = None,
+    ) -> Any:
         """Blocking evaluation of one request (the paper's client call)."""
-        req = self.submit_async(theta, tag=tag, batchable=batchable)
+        req = self.submit_async(
+            theta, tag=tag, batchable=batchable, deadline_s=deadline_s
+        )
         return self.result(req)
 
-    def submit_async(self, theta, *, tag: str = "", batchable: bool = False) -> Request:
+    def submit_async(
+        self,
+        theta,
+        *,
+        tag: str = "",
+        batchable: bool = False,
+        deadline_s: Optional[float] = None,
+    ) -> Request:
+        """Enqueue one request; see :meth:`submit` for the blocking form.
+
+        ``deadline_s`` arms queue-time shedding: a request still queued
+        that many seconds after arrival is completed with
+        :class:`DeadlineExceeded` instead of dispatching stale (once
+        dispatched it always runs to completion).  With
+        ``max_queue_per_tag`` set, a submission that would push the tag's
+        queue past the bound is rejected immediately with
+        :class:`QueueFull` — overload sheds at admission, with bounded
+        memory, instead of queueing unboundedly.
+        """
         req = Request(
             theta=theta, tag=tag, batchable=batchable, arrived_at=time.monotonic()
         )
+        if deadline_s is not None:
+            req.deadline_at = req.arrived_at + deadline_s
         req._cancel_hook = self.cancel
         fire: Optional[List[_BatchWaiter]] = None
         pairs: List[Tuple[Request, Server]] = []
+        fault: Optional[str] = None
         with self._cv:
             if self._shutdown:
                 req.error = RuntimeError("balancer shut down")
-            elif not self._free.servable(tag):  # O(1) admission check
+            elif not self._free.servable(tag) and not self._waitable_locked(tag):
                 req.error = RuntimeError(f"no live server accepts tag '{tag}'")
+                fault = "rejected"
+            elif (
+                self.max_queue_per_tag is not None
+                and self._queue.count_tag(tag) >= self.max_queue_per_tag
+            ):
+                req.error = QueueFull(
+                    f"tag '{tag}' queue is at its bound "
+                    f"({self.max_queue_per_tag}); submission shed"
+                )
+                fault = "queue_full"
             else:
                 self._ensure_started_locked()
+                if req.deadline_at is not None:
+                    self._has_deadlines = True
                 self._queue.push(req)  # queue.push(request[j])
                 # Submit-driven fast path: if this tag has a free server,
                 # take the dispatch decision here and now — no dispatcher
@@ -269,6 +389,8 @@ class LoadBalancer:
                 if batchable:
                     fire = self._ripe_batch_waiters_locked(tag)
         if req.error is not None:  # rejected: never booked in telemetry
+            if fault is not None:
+                self._telemetry.record_fault(fault, tag)
             req._complete()
             return req
         self._telemetry.record_arrival(req)
@@ -280,7 +402,12 @@ class LoadBalancer:
         return req
 
     def submit_many(
-        self, thetas: Sequence[Any], *, tag: str = "", batchable: bool = False
+        self,
+        thetas: Sequence[Any],
+        *,
+        tag: str = "",
+        batchable: bool = False,
+        deadline_s: Optional[float] = None,
     ) -> List[Request]:
         """Enqueue a batch of requests under one lock acquisition.
 
@@ -293,25 +420,42 @@ class LoadBalancer:
         with the error set — rejected requests are never booked in
         telemetry.
         """
+        now = time.monotonic()
+        deadline_at = None if deadline_s is None else now + deadline_s
         reqs = [
             Request(
                 theta=theta, tag=tag, batchable=batchable,
-                arrived_at=time.monotonic(),
+                arrived_at=now, deadline_at=deadline_at,
             )
             for theta in thetas
         ]
         for req in reqs:
             req._cancel_hook = self.cancel
-        error: Optional[str] = None
+        error: Optional[Exception] = None
+        fault: Optional[str] = None
         fire: Optional[List[_BatchWaiter]] = None
         pairs: List[Tuple[Request, Server]] = []
         with self._cv:
             if self._shutdown:
-                error = "balancer shut down"
-            elif not self._free.servable(tag):
-                error = f"no live server accepts tag '{tag}'"
+                error = RuntimeError("balancer shut down")
+            elif not self._free.servable(tag) and not self._waitable_locked(tag):
+                error = RuntimeError(f"no live server accepts tag '{tag}'")
+                fault = "rejected"
+            elif (
+                self.max_queue_per_tag is not None
+                and self._queue.count_tag(tag) + len(reqs) > self.max_queue_per_tag
+            ):
+                # All-or-nothing admission also under overload: a batch that
+                # would overflow the tag's bound is shed whole, never split.
+                error = QueueFull(
+                    f"batch of {len(reqs)} would push tag '{tag}' past its "
+                    f"queue bound ({self.max_queue_per_tag}); submission shed"
+                )
+                fault = "queue_full"
             else:
                 self._ensure_started_locked()
+                if deadline_at is not None:
+                    self._has_deadlines = True
                 for req in reqs:
                     self._queue.push(req)
                 if reqs and self._free.has_free_for(tag):
@@ -320,7 +464,9 @@ class LoadBalancer:
                     fire = self._ripe_batch_waiters_locked(tag)
         if error is not None:
             for req in reqs:
-                req.error = RuntimeError(error)
+                if fault is not None:
+                    self._telemetry.record_fault(fault, tag)
+                req.error = type(error)(*error.args)  # fresh traceback each
                 req._complete()
             return reqs
         for req in reqs:
@@ -392,9 +538,48 @@ class LoadBalancer:
             # mutex.unlock() — implicit; hand off to the worker pool.
             self._hand_off(pairs)
 
+    def _waitable_locked(self, tag: str) -> bool:
+        """No *live* server accepts ``tag``, but a quarantined one would:
+        the tag is one successful health probe away from servable, so its
+        requests queue for re-admission instead of failing.  Always False
+        without health monitoring (preserving the strict admission check).
+        """
+        return self._health is not None and self._health.has_quarantined_for(tag)
+
+    def _shed_expired_locked(self) -> None:
+        """Complete queued requests whose deadline passed (caller holds the
+        mutex) with :class:`DeadlineExceeded`.
+
+        Head-of-line, best-effort: within a tag requests dispatch FIFO, so
+        the head is always the next to go — shedding checks each tag's
+        successive heads at every dispatch opportunity, which is exactly
+        when a stale request would otherwise occupy a server.  Zero cost
+        until some request actually carries a deadline.
+        """
+        if not self._has_deadlines or not self._queue:
+            return
+        now = time.monotonic()
+        for tag in self._queue.tags():
+            while True:
+                head = self._queue.head(tag)
+                if (
+                    head is None
+                    or head.deadline_at is None
+                    or head.deadline_at > now
+                ):
+                    break
+                self._queue.pop(head)
+                head.error = DeadlineExceeded(
+                    f"request shed after waiting past its deadline "
+                    f"({now - head.arrived_at:.3f}s queued)"
+                )
+                self._telemetry.record_fault("deadline_shed", tag)
+                head._complete()
+
     def _drain_ready_locked(self) -> List[Tuple[Request, Server]]:
         """Take every dispatch decision currently possible (caller holds
         the mutex): pop each chosen request, mark its server busy."""
+        self._shed_expired_locked()
         pairs: List[Tuple[Request, Server]] = []
         while True:
             pair = self._select_locked()
@@ -437,7 +622,31 @@ class LoadBalancer:
             return None
         if self._legacy_select:
             return self._policy.select(list(self._queue), self._ctx)
+        # Open circuit breakers (health monitoring only) veto (server, tag)
+        # routes; the filter is consulted ONLY while some breaker is open,
+        # so the default engine's decision path is untouched.
+        health = self._health
+        breakers = health is not None and health.has_open_breakers()
         if self._default_ready:
+            if breakers:
+                # Breaker-aware scan: earliest head whose candidate list
+                # survives the route filter (a tag whose every free server
+                # is vetoed waits for cooldown or another server).
+                for tag, head in sorted(
+                    self._queue.heads(), key=lambda th: th[1].seq
+                ):
+                    if not self._free.has_free_for(tag):
+                        continue
+                    candidates = [
+                        s
+                        for s in self._free.candidates(tag)
+                        if not health.breaker_blocks(s, tag)
+                    ]
+                    if candidates:
+                        return head, self._policy.choose_server(
+                            head, candidates, self._ctx
+                        )
+                return None
             # Fast path: the default select_ready takes the earliest ready
             # head, so find it with O(1) has_free_for probes and build the
             # candidate list once, for that tag only.
@@ -454,6 +663,10 @@ class LoadBalancer:
         ready: List[Tuple[Request, List[Server]]] = []
         for tag, head in self._queue.heads():
             candidates = self._free.candidates(tag)
+            if breakers:
+                candidates = [
+                    s for s in candidates if not health.breaker_blocks(s, tag)
+                ]
             if candidates:
                 ready.append((head, candidates))
         if not ready:
@@ -471,6 +684,8 @@ class LoadBalancer:
         """
         for tag in self._queue.tags():
             if not self._free.servable(tag):
+                if self._waitable_locked(tag):
+                    continue  # a quarantined server may heal: requests wait
                 for req in self._queue.drain_tag(tag):
                     req.error = RuntimeError(
                         f"no live server accepts tag '{req.tag}'"
@@ -537,11 +752,14 @@ class LoadBalancer:
             self._fail_dispatch(req, server)
             return None
         req.completed_at = time.monotonic()
-        if isinstance(result, BaseException):
+        ok = not isinstance(result, BaseException)
+        if ok:
+            req.result = result
+        else:
             req.error = result
             self._telemetry.record_member_failure(server)
-        else:
-            req.result = result
+        if self._health is not None:
+            self._health.note_result(server, req.tag, ok)
         self._telemetry.record_completion(req, server)
         self._book_wire(req.tag, server, req.completed_at - req.dispatched_at)
         nxt = self._free_server(server)
@@ -581,6 +799,7 @@ class LoadBalancer:
             server.last_free_at = time.monotonic()
             self._free.mark_free(server)
             if self._queue and not self._shutdown:
+                self._shed_expired_locked()
                 pair = self._select_locked()
                 if pair is not None:
                     nreq, nserver = pair
@@ -591,8 +810,17 @@ class LoadBalancer:
         return None
 
     def _fail_dispatch(self, req: Request, server: Server) -> None:
-        """A handler raised: mark the server dead, retry or fail ``req``."""
+        """A handler raised: mark the server dead, retry or fail ``req``.
+
+        With health monitoring the death is a *quarantine* (the monitor
+        probes and re-admits); with ``poison_threshold`` a request whose
+        failures span that many distinct servers is declared poison and
+        failed before it can take down another — the classic
+        crash-the-whole-pool input (a theta that segfaults the solver)
+        costs ``poison_threshold`` servers instead of all of them.
+        """
         self._telemetry.record_failure(server)
+        self._telemetry.record_fault("server_death", req.tag)
         with self._cv:
             server.dead = True
             server.busy = False
@@ -601,13 +829,28 @@ class LoadBalancer:
             self._cv.notify()  # dirty sweep must run even with no free server
         with self._work_cv:  # a death shrinks the pool like a retire
             self._work_cv.notify_all()
+        if self._health is not None:
+            self._health.quarantine(server)
+        req.killed_servers.add(server.name)
         req.retries += 1
-        if req.retries > self.max_retries:
+        if (
+            self.poison_threshold is not None
+            and len(req.killed_servers) >= self.poison_threshold
+        ):
+            self._telemetry.record_fault("poison", req.tag)
+            req.error = PoisonRequestError(
+                f"request killed {len(req.killed_servers)} distinct servers "
+                f"({sorted(req.killed_servers)}); quarantined as poison"
+            )
+            req._complete()
+        elif req.retries > self.max_retries:
+            self._telemetry.record_fault("retries_exhausted", req.tag)
             req.error = ServerDiedError(
                 f"request failed after {req.retries} attempts"
             )
             req._complete()
         else:
+            self._telemetry.record_fault("requeue", req.tag)
             self._requeue(req)
 
     def _requeue(self, req: Request) -> None:
@@ -715,21 +958,40 @@ class LoadBalancer:
         try:
             results = server.batch_call([r.theta for r in members])
         except Exception:  # noqa: BLE001 - whole-call fault kills the server
-            # Coalesced members retry elsewhere — each burns one retry, so
+            # Coalesced members retry elsewhere — each burns one retry (and
+            # one distinct-server kill toward the poison threshold), so
             # max_retries bounds them like any other request; the primary
             # follows the normal server-death path.
             exhausted: List[Request] = []
+            poisoned: List[Request] = []
             with self._cv:
                 for r in reversed(extra):
                     r.retries += 1
+                    r.killed_servers.add(server.name)
+                    if (
+                        self.poison_threshold is not None
+                        and len(r.killed_servers) >= self.poison_threshold
+                    ):
+                        poisoned.append(r)
+                        continue
                     if r.retries > self.max_retries:
                         exhausted.append(r)
                         continue
                     r.dispatched_at = 0.0
                     r.server = None
                     self._queue.push_front(r)  # original seq: order kept
+                    self._telemetry.record_fault("requeue", r.tag)
                 self._cv.notify()
+            for r in poisoned:
+                self._telemetry.record_fault("poison", r.tag)
+                r.error = PoisonRequestError(
+                    f"request killed {len(r.killed_servers)} distinct "
+                    f"servers ({sorted(r.killed_servers)}); quarantined as "
+                    f"poison"
+                )
+                r._complete()
             for r in exhausted:
+                self._telemetry.record_fault("retries_exhausted", r.tag)
                 r.error = ServerDiedError(
                     f"request failed after {r.retries} attempts"
                 )
@@ -739,11 +1001,14 @@ class LoadBalancer:
         done = time.monotonic()
         for r, res in zip(members, results):
             r.completed_at = done
-            if isinstance(res, BaseException):
+            ok = not isinstance(res, BaseException)
+            if ok:
+                r.result = res
+            else:
                 r.error = res  # per-member failure: batch mates unaffected
                 self._telemetry.record_member_failure(server)
-            else:
-                r.result = res
+            if self._health is not None:
+                self._health.note_result(server, r.tag, ok)
         # One busy interval + one EWMA sample for the fused call (the
         # primary's — the service time is real even if some members
         # errored), plus request-count credit for the coalesced members;
@@ -801,7 +1066,7 @@ class LoadBalancer:
                 for info in finished:
                     self._complete_slot(info, server)
         except Exception:  # noqa: BLE001 - pool fault kills the pool
-            self._fail_pool(server)
+            self._fail_pool(server, req.tag)
             return None
         return self._free_server(server)
 
@@ -839,10 +1104,11 @@ class LoadBalancer:
         self._telemetry.record_completion(r, server)
         r._complete()
 
-    def _fail_pool(self, server: Server) -> None:
+    def _fail_pool(self, server: Server, tag: str) -> None:
         """A DecodePool's step/insert raised: kill the pool, fail every
         in-flight slot request (no retry — their KV state is gone)."""
         self._telemetry.record_failure(server)
+        self._telemetry.record_fault("server_death", tag)
         infos = server.clear()
         with self._cv:
             server.dead = True
@@ -852,6 +1118,8 @@ class LoadBalancer:
             self._cv.notify()
         with self._work_cv:  # a death shrinks the pool like a retire
             self._work_cv.notify_all()
+        if self._health is not None:
+            self._health.quarantine(server)
         now = time.monotonic()
         for info in infos:
             info.req.completed_at = now

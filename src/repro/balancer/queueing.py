@@ -32,7 +32,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from collections import deque
-from typing import Dict, Iterator, List, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 from .types import Request, Server
 
@@ -168,6 +168,16 @@ class IndexedQueue:
     def count_batchable(self, tag: str) -> int:
         return self._n_batchable.get(tag, 0)
 
+    def count_tag(self, tag: str) -> int:
+        """Queued requests of ``tag`` — the admission-control depth check."""
+        return len(self._by_tag.get(tag, ()))
+
+    def head(self, tag: str) -> Optional[Request]:
+        """Peek the head request of ``tag`` (None when empty) — used by
+        deadline shedding to pop expired heads without a drain."""
+        dq = self._by_tag.get(tag)
+        return dq[0] if dq else None
+
     def __len__(self) -> int:
         return self._n
 
@@ -199,6 +209,7 @@ class FreeServerIndex:
 
     def __init__(self, servers: Sequence[Server] = ()) -> None:
         self._pool_pos: Dict[int, int] = {}  # id(server) -> registration order
+        self._next_pos = 0  # monotonic: re-admissions get a fresh position
         self._free_tagged: Dict[str, Dict[int, Server]] = {}
         self._free_wild: Dict[int, Server] = {}
         self._live_tagged: Dict[str, int] = {}
@@ -208,7 +219,19 @@ class FreeServerIndex:
 
     # -- membership / lifecycle ----------------------------------------------
     def add(self, server: Server) -> None:
-        self._pool_pos.setdefault(id(server), len(self._pool_pos))
+        """Register ``server`` (initial pool, elastic add, or health-monitor
+        re-admission after :meth:`mark_dead`).  Positions come from a
+        monotonic counter, NOT ``len(_pool_pos)``: a re-admitted server's
+        old position was tombstoned to None at death, so a length-based
+        position would collide with a live server's (or stay None) and
+        corrupt the pool-order sort in :meth:`candidates`.  Re-admission
+        therefore appends to pool order — with no deaths the positions
+        are the familiar 0, 1, 2, ... and the seed trace is unchanged.
+        """
+        key = id(server)
+        if self._pool_pos.get(key) is None:  # new, or re-admitted after death
+            self._pool_pos[key] = self._next_pos
+            self._next_pos += 1
         if server.dead:
             return
         if server.capacity_tags:

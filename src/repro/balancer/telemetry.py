@@ -156,6 +156,9 @@ class Telemetry:
         self._occupancy: Dict[str, Dict[str, float]] = {}
         # remote serving: per-(server, tag) wire vs service split
         self._wire: Dict[tuple, Dict[str, float]] = {}
+        # fault counters, keyed (kind, tag): server deaths, requeues,
+        # retries-exhausted, shed/rejected submissions, re-admissions, ...
+        self._faults: Dict[tuple, int] = {}
         self._ewma_alpha = ewma_alpha
         # streaming idle-time aggregates (exact mode derives from _history)
         self._idle_n = 0
@@ -250,6 +253,8 @@ class Telemetry:
                 w["service_ewma"] = (
                     (1 - al) * w["service_ewma"] + al * service_s
                 )
+            elif kind == "fault":
+                self._faults[(a, b)] = self._faults.get((a, b), 0) + 1
             elif kind == "occupancy":
                 occupied, capacity = b
                 occ = self._occupancy.get(a)
@@ -342,6 +347,29 @@ class Telemetry:
         """
         self._pending.append(("wire", (server, tag), (wire_s, service_s)))
         self._maybe_fold()
+
+    def record_fault(self, kind: str, tag: str = "") -> None:
+        """Book one fault event of ``kind`` against ``tag``.
+
+        Kinds in use: ``server_death``, ``requeue``, ``retries_exhausted``,
+        ``poison``, ``queue_full``, ``deadline_shed``, ``rejected``,
+        ``readmission``, ``breaker_open``.  Counters are independent of the
+        request history — a rejected submission moves a fault counter but
+        is still never booked as traffic (``n_requests`` / idle stats /
+        the history ring are untouched).  Surfaced as
+        ``summary()['fault_counters']`` and per-tag columns in
+        :meth:`stats_table`.
+        """
+        self._pending.append(("fault", kind, tag))
+        self._maybe_fold()
+
+    def fault_count(self, kind: str, tag: Optional[str] = None) -> int:
+        """Total count for ``kind`` (summed over tags, or one ``tag``)."""
+        with self._lock:
+            self._fold_locked()
+            if tag is not None:
+                return self._faults.get((kind, tag), 0)
+            return sum(n for (k, _t), n in self._faults.items() if k == kind)
 
     def record_failure(self, server: Server) -> None:
         server.stats.n_failures += 1  # eager: single-owner stats
@@ -479,6 +507,10 @@ class Telemetry:
                 }
                 for (server, tag), w in self._wire.items()
             }
+            fault_counters: Dict[str, Dict[str, int]] = {}
+            for (kind, tag), n in self._faults.items():
+                fault_counters.setdefault(kind, {})[tag] = n
+            stats["fault_counters"] = fault_counters
             stats["slot_occupancy"] = {
                 name: {
                     "mean": occ["slot_steps"] / (occ["steps"] * occ["capacity"])
@@ -496,19 +528,30 @@ class Telemetry:
         """Per-tag serving/runtime rows for human-readable reports.
 
         One row per tag ever completed: request count, EWMA service time,
-        the generated-token counter (0 for non-serving tags), and — for
-        tags served by remote servers — the EWMA wire seconds per call
-        (None for purely local tags).
+        the generated-token counter (0 for non-serving tags), for tags
+        served by remote servers the EWMA wire seconds per call (None for
+        purely local tags), and the failure columns — server deaths,
+        requeues, retries-exhausted, shed/rejected submissions
+        (queue-full + deadline-shed + unservable rejections), and
+        re-admissions.
         """
         with self._lock:
             self._fold_locked()
-            tags = sorted(set(self._tag_done) | set(self._tag_tokens))
+            tags = sorted(
+                set(self._tag_done)
+                | set(self._tag_tokens)
+                | {t for _k, t in self._faults}
+            )
             wire_by_tag: Dict[str, float] = {}
             for (_server, tag), w in self._wire.items():
                 # several replicas may serve one tag: report the worst EWMA
                 prev = wire_by_tag.get(tag)
                 if prev is None or w["wire_ewma"] > prev:
                     wire_by_tag[tag] = w["wire_ewma"]
+
+            def fault(kind: str, tag: str) -> int:
+                return self._faults.get((kind, tag), 0)
+
             return [
                 {
                     "tag": tag,
@@ -516,6 +559,15 @@ class Telemetry:
                     "ewma_s": self._tag_ewma.get(tag),
                     "tokens": self._tag_tokens.get(tag, 0),
                     "wire_ewma_s": wire_by_tag.get(tag),
+                    "n_deaths": fault("server_death", tag),
+                    "n_requeues": fault("requeue", tag),
+                    "n_retries_exhausted": fault("retries_exhausted", tag),
+                    "n_shed": (
+                        fault("queue_full", tag)
+                        + fault("deadline_shed", tag)
+                        + fault("rejected", tag)
+                    ),
+                    "n_readmitted": fault("readmission", tag),
                 }
                 for tag in tags
             ]

@@ -87,11 +87,28 @@ class Server:
         self.capacity_tags = frozenset(capacity_tags)
         self.busy = False
         self.dead = False
+        # live -> quarantined -> probation -> live (or retired, terminal).
+        # ``dead`` stays the dispatcher-visible admission flag; lifecycle
+        # records *why* and whether the health monitor may re-admit.
+        self.lifecycle = "live"
         self.stats = ServerStats()
         self.last_free_at: float = time.monotonic()
 
     def accepts(self, tag: str) -> bool:
         return (not self.capacity_tags) or (tag in self.capacity_tags)
+
+    def probe(self) -> bool:
+        """Health probe: is this server able to serve right now?
+
+        The in-process default is a no-op returning True — a live Python
+        object can always answer.  Remote servers override this with a
+        heartbeat frame across their transport, and the chaos harness
+        (:mod:`repro.balancer.faults`) shadows it to keep a crashed
+        server failing probes for its scheduled downtime.  Called by the
+        :class:`~repro.balancer.health.HealthMonitor` on quarantined
+        servers only — never on the dispatch hot path.
+        """
+        return True
 
     def batch_call(self, thetas: Sequence[Any]) -> List[Any]:
         """Evaluate a coalesced batch; the dispatcher's single entry point.
@@ -496,6 +513,9 @@ class Request:        # numpy thetas ("truth value ambiguous" in queue.remove)
     # set by streaming telemetry once this request's queue delay has been
     # folded into the running idle moments (guards double/late booking)
     idle_booked: bool = field(default=False, repr=False)
+    # absolute monotonic deadline (submit_async(deadline_s=...)); a queued
+    # request past it is shed with DeadlineExceeded at dispatch time
+    deadline_at: Optional[float] = None
 
     def __post_init__(self) -> None:
         self._callbacks: List[Callable[["Request"], None]] = []
@@ -503,6 +523,9 @@ class Request:        # numpy thetas ("truth value ambiguous" in queue.remove)
         # Set by the dispatcher at admission; lets cancel() reach back
         # into the owning balancer without a hard reference cycle here.
         self._cancel_hook: Optional[Callable[["Request"], bool]] = None
+        # Names of distinct servers whose handler died serving this
+        # request — the poison-request detector's evidence set.
+        self.killed_servers: set = set()
 
     @property
     def queue_delay(self) -> float:
@@ -564,5 +587,29 @@ class ServerDiedError(RuntimeError):
     """A request exhausted its retries because its servers kept dying."""
 
 
+class PoisonRequestError(ServerDiedError):
+    """A request killed ``poison_threshold`` *distinct* servers.
+
+    Retrying such a request further would consume the pool one server at
+    a time (the classic poison-pill failure mode), so the dispatcher
+    quarantines the request instead: it completes with this error and
+    never re-enters the queue.  Subclasses :class:`ServerDiedError` so
+    callers handling generic server-death failures keep working.
+    """
+
+
 class RequestCancelled(RuntimeError):
     """A queued request was cancelled by its client (deadline/cancel)."""
+
+
+class QueueFull(RuntimeError):
+    """Admission control rejected a submission: the tag's queue is at its
+    configured ``max_queue_per_tag`` depth.  The request is never queued
+    and never booked in telemetry history (only the shed counter moves);
+    clients back off or shed load themselves."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """A queued request crossed its ``deadline_s`` before any server was
+    free to take it: shed at dispatch time instead of evaluating work
+    whose client has already given up."""

@@ -78,6 +78,22 @@ class MLDAWorkloadConfig:
     remote_connections: int = 2
     remote_timeout_s: float = 30.0
     remote_retries: int = 2
+    # fault tolerance (DESIGN.md §12) — all off by default (the defaults
+    # keep the engine byte-identical to the pre-fault-tolerance one).
+    # self_healing enables the balancer's quarantine/probe/re-admission
+    # lifecycle for dead servers (probe_interval_s sets the monitor
+    # cadence); poison_threshold fails a request once it has killed that
+    # many distinct servers instead of letting one bad theta exterminate
+    # the pool; max_queue_per_tag bounds per-level queue depth (admission
+    # control: excess submissions are rejected with QueueFull); chain
+    # auto-resume restarts a failed chain from its latest snapshot
+    # (max_restarts times, snapshots every checkpoint_every fine samples).
+    self_healing: bool = False
+    probe_interval_s: float = 0.05
+    poison_threshold: Optional[int] = None
+    max_queue_per_tag: Optional[int] = None
+    max_restarts: int = 0
+    checkpoint_every: int = 0
 
     @property
     def batchable_levels(self) -> Tuple[int, ...]:
@@ -91,12 +107,29 @@ class MLDAWorkloadConfig:
         return {"batch_window_s": self.batch_window_s, "max_batch": self.max_batch}
 
     def balancer_kwargs(self) -> Dict[str, object]:
-        """All balancer construction kwargs this config implies (batching
-        plus telemetry mode) — what examples/benchmarks should splat."""
+        """All balancer construction kwargs this config implies (batching,
+        telemetry mode, fault tolerance) — what examples/benchmarks splat."""
         kwargs = self.batch_kwargs()
         if self.exact_telemetry:
             kwargs["exact_telemetry"] = True
+        if self.self_healing:
+            from repro.balancer import HealthConfig
+
+            kwargs["health"] = HealthConfig(probe_interval_s=self.probe_interval_s)
+        if self.poison_threshold is not None:
+            kwargs["poison_threshold"] = self.poison_threshold
+        if self.max_queue_per_tag is not None:
+            kwargs["max_queue_per_tag"] = self.max_queue_per_tag
         return kwargs
+
+    def runner_kwargs(self) -> Dict[str, object]:
+        """EnsembleRunner construction kwargs for chain auto-resume."""
+        if self.max_restarts <= 0:
+            return {}
+        return {
+            "max_restarts": self.max_restarts,
+            "checkpoint_every": self.checkpoint_every,
+        }
 
     def remote_kwargs(self) -> Dict[str, object]:
         """Transport construction kwargs for the remote endpoints

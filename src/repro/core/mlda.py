@@ -617,6 +617,9 @@ def balanced_mlda(
     n_chains: int = 1,
     ensemble_seed: int = 0,
     as_runner: bool = False,
+    max_restarts: int = 0,
+    checkpoint_every: int = 0,
+    checkpoint_dir: Optional[str] = None,
     device_resident: bool = False,
     device_densities: Optional[Sequence[Callable]] = None,
     device_chunk: int = 16,
@@ -642,7 +645,9 @@ def balanced_mlda(
     before — pass ``as_runner=True`` to get an ``EnsembleRunner`` even for
     one chain (uniform driving code across chain counts).  ``speculative``
     enables coarse-subchain prefetch either way (bit-identical chains; see
-    DESIGN.md §8).
+    DESIGN.md §8).  ``max_restarts`` / ``checkpoint_every`` /
+    ``checkpoint_dir`` flow to the runner's chain auto-resume (DESIGN.md
+    §12): a chain whose step dies restarts from its latest snapshot.
 
     A level listed in both ``batchable_levels`` and ``hedged_levels`` is
     hedged, not batched (duplicated submissions are never coalesced).
@@ -749,6 +754,9 @@ def balanced_mlda(
         max(n_chains, 1),
         seed=ensemble_seed,
         balancer=balancer,
+        max_restarts=max_restarts,
+        checkpoint_every=checkpoint_every,
+        checkpoint_dir=checkpoint_dir,
     )
     return runner, balancer
 

@@ -11,6 +11,7 @@ event-driven fan-in, no polling, no per-chain threads.
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from dataclasses import dataclass, field
@@ -34,11 +35,15 @@ class EnsembleResult:
     evaluation errored past the balancer's retries (server death,
     shutdown) is dropped into ``failures`` (original chain index ->
     exception) without taking the rest of the ensemble down.
+    ``restarts`` counts auto-resume recoveries per chain (chain index ->
+    restarts consumed; absent = ran clean) — see
+    :class:`EnsembleRunner`'s ``max_restarts``.
     """
 
     chains: np.ndarray  # (n_completed_chains, n_samples, dim)
     samplers: List[MLDASampler]
     failures: Dict[int, BaseException] = field(default_factory=dict)
+    restarts: Dict[int, int] = field(default_factory=dict)
 
     @property
     def n_chains(self) -> int:
@@ -110,6 +115,21 @@ class EnsembleRunner:
     / ``finish`` async split are dispatched through the balancer without
     blocking the driver; plain callables are evaluated inline (useful in
     tests and surrogate-only hierarchies).
+
+    **Auto-resume** (``max_restarts > 0``): a chain whose evaluation
+    errors past the balancer's retries is restarted from its latest
+    snapshot — last secured fine sample, samples drawn so far, and the
+    chain RNG state as of the snapshot — on a *fresh* sampler from the
+    factory, up to ``max_restarts`` times before it counts as failed.
+    Snapshots are taken every ``checkpoint_every`` fine samples (0 =
+    start-state only: a restart replays the chain from its beginning);
+    with ``checkpoint_dir`` set they are also written to disk through
+    :mod:`repro.checkpoint` (``chain_<c>.npz``) and the restart restores
+    from disk, so recovery survives the snapshot path a real deployment
+    would use.  The resumed chain continues the Markov chain from the
+    snapshot state — statistically valid, but not bit-identical to the
+    uninterrupted run (steps between the snapshot and the crash are
+    redrawn).
     """
 
     def __init__(
@@ -119,10 +139,14 @@ class EnsembleRunner:
         *,
         seed: Union[int, np.random.SeedSequence] = 0,
         balancer: Optional[LoadBalancer] = None,
+        max_restarts: int = 0,
+        checkpoint_every: int = 0,
+        checkpoint_dir: Optional[str] = None,
     ) -> None:
         if n_chains < 1:
             raise ValueError("n_chains must be >= 1")
         self.n_chains = int(n_chains)
+        self._factory = sampler_factory
         self.samplers = [sampler_factory(c) for c in range(self.n_chains)]
         ss = (
             seed
@@ -133,6 +157,9 @@ class EnsembleRunner:
         self.balancer = balancer or next(
             (s.balancer for s in self.samplers if s.balancer is not None), None
         )
+        self.max_restarts = int(max_restarts)
+        self.checkpoint_every = int(checkpoint_every)
+        self.checkpoint_dir = checkpoint_dir
 
     # -- driver ---------------------------------------------------------------
     def run(
@@ -151,14 +178,26 @@ class EnsembleRunner:
         Failure isolation: an evaluation error (server death past retries,
         balancer shutdown) fails only the chain that hit it — the rest run
         to completion and the casualty lands in ``EnsembleResult.failures``.
-        The run raises only when *every* chain failed.
+        With ``max_restarts`` the chain first auto-resumes from its latest
+        snapshot that many times.  The run raises only when *every* chain
+        failed.
         """
         chains: List[ChainState] = []
         inflight: List[Dict[int, Tuple[float, Any]]] = []
+        # Auto-resume state: ``prefix[c]`` holds the fine samples secured
+        # by chain c's previous incarnations (empty while it runs clean);
+        # the live ChainState only draws the remainder.
+        prefix: List[np.ndarray] = []
+        snapshots: List[Dict[str, Any]] = []
+        last_snap: List[int] = [0] * self.n_chains
+        restarts: Dict[int, int] = {}
         for c, (sampler, rng) in enumerate(zip(self.samplers, self.rngs)):
             start = theta0(c, rng) if callable(theta0) else theta0
+            start = np.asarray(start, dtype=float)
             chains.append(ChainState(sampler, start, n_samples, rng))
             inflight.append({})
+            prefix.append(np.empty((0,) + start.shape))
+            snapshots.append(self._snapshot(c, start, prefix[c], rng))
         runnable = list(range(self.n_chains))
         # chain index -> (pe, log_prior, request) it is parked on
         parked: Dict[int, Tuple[PendingEval, float, Any]] = {}
@@ -169,17 +208,35 @@ class EnsembleRunner:
         wake = threading.Event()
         printed = 0
         while runnable or parked:
+            revived: List[int] = []
             for c in runnable:
                 try:
                     wait = self._pump(c, chains[c], inflight[c])
                 except Exception as e:  # noqa: BLE001 - isolate this chain
-                    failures[c] = e
-                    chains[c].abort()
+                    if self._resume(
+                        c, e, chains, inflight, prefix, snapshots,
+                        last_snap, restarts, failures, n_samples,
+                    ):
+                        revived.append(c)
                     continue
                 if wait is not None:
                     parked[c] = wait
                     wait[2].add_done_callback(lambda _r: wake.set())
-            runnable = []
+            # Snapshot chains that just advanced (cadence: checkpoint_every
+            # fine samples since the chain's last snapshot).
+            if self.checkpoint_every > 0:
+                for c in runnable:
+                    if c in failures or chains[c].done:
+                        continue
+                    drawn = len(prefix[c]) + chains[c].samples_drawn
+                    if drawn >= last_snap[c] + self.checkpoint_every:
+                        last_snap[c] = drawn
+                        snapshots[c] = self._take_snapshot(
+                            c, chains[c], prefix[c], snapshots[c]["theta"]
+                        )
+            runnable = revived
+            if runnable:
+                continue  # pump restarted chains before sleeping
             if not parked:
                 break  # every chain finished (or failed)
             if not any(req.done.is_set() for (_pe, _lp, req) in parked.values()):
@@ -192,12 +249,17 @@ class EnsembleRunner:
                     try:
                         self._finish(chains[c].sampler, pe, lp, req)
                     except Exception as e:  # noqa: BLE001
-                        failures[c] = e
-                        chains[c].abort()
+                        if self._resume(
+                            c, e, chains, inflight, prefix, snapshots,
+                            last_snap, restarts, failures, n_samples,
+                        ):
+                            runnable.append(c)
                         continue
                     runnable.append(c)
             if progress_every:
-                total = sum(ch.samples_drawn for ch in chains)
+                total = sum(
+                    len(p) + ch.samples_drawn for p, ch in zip(prefix, chains)
+                )
                 while total >= printed + progress_every:
                     printed += progress_every
                     print(
@@ -210,12 +272,117 @@ class EnsembleRunner:
             raise RuntimeError(
                 f"all {self.n_chains} chains failed"
             ) from next(iter(failures.values()))
-        out = np.stack([chains[c].samples() for c in ok])
+        out = np.stack(
+            [
+                np.concatenate(
+                    [prefix[c], np.asarray(chains[c].samples())]
+                )[:n_samples]
+                for c in ok
+            ]
+        )
         return EnsembleResult(
             chains=out,
             samplers=[self.samplers[c] for c in ok],
             failures=failures,
+            restarts=restarts,
         )
+
+    # -- auto-resume (snapshot / restart) -------------------------------------
+    def _snapshot(
+        self,
+        c: int,
+        theta: np.ndarray,
+        samples: np.ndarray,
+        rng: np.random.Generator,
+    ) -> Dict[str, Any]:
+        """One resume point: restart theta, secured samples, RNG state."""
+        snap = {
+            "theta": np.array(theta, dtype=float, copy=True),
+            "samples": np.array(samples, copy=True),
+            "rng_state": rng.bit_generator.state,
+        }
+        if self.checkpoint_dir is not None:
+            from repro import checkpoint as _ckpt
+
+            _ckpt.save(
+                os.path.join(self.checkpoint_dir, f"chain_{c}.npz"),
+                {"theta": snap["theta"], "samples": snap["samples"]},
+                step=len(snap["samples"]),
+                extra={"rng_state": snap["rng_state"]},
+            )
+        return snap
+
+    def _take_snapshot(
+        self, c: int, chain: ChainState, pre: np.ndarray, theta0: np.ndarray
+    ) -> Dict[str, Any]:
+        """Snapshot a live chain: everything secured so far.
+
+        Taken while the chain may be parked on an in-flight solve — only
+        *completed* fine samples and the RNG state are captured, so a
+        restart replays from the last sample (the in-flight proposal is
+        redrawn: a valid Markov-chain continuation, not a bit replay).
+        """
+        drawn = chain.samples_drawn
+        secured = np.asarray(chain.samples())[:drawn]
+        samples = np.concatenate([pre, secured]) if drawn else pre
+        theta = samples[-1] if len(samples) else theta0
+        return self._snapshot(c, theta, samples, chain.rng)
+
+    def _resume(
+        self,
+        c: int,
+        err: BaseException,
+        chains: List[ChainState],
+        inflight: List[Dict[int, Tuple[float, Any]]],
+        prefix: List[np.ndarray],
+        snapshots: List[Dict[str, Any]],
+        last_snap: List[int],
+        restarts: Dict[int, int],
+        failures: Dict[int, BaseException],
+        n_samples: int,
+    ) -> bool:
+        """Restart chain ``c`` from its latest snapshot, if budget allows.
+
+        Returns True when the chain was revived (a fresh sampler from the
+        factory picks up at the snapshot theta for the remaining draws);
+        False when ``max_restarts`` is exhausted and the chain is failed.
+        """
+        chains[c].abort()
+        used = restarts.get(c, 0)
+        if used >= self.max_restarts:
+            failures[c] = err
+            return False
+        restarts[c] = used + 1
+        snap = snapshots[c]
+        if self.checkpoint_dir is not None:
+            # Recover through the on-disk snapshot (the path a process
+            # restart would take); fall back to the in-memory copy if the
+            # file is unreadable.
+            try:
+                from repro import checkpoint as _ckpt
+
+                tree, _step, extra = _ckpt.restore(
+                    os.path.join(self.checkpoint_dir, f"chain_{c}.npz"),
+                    {"theta": snap["theta"], "samples": snap["samples"]},
+                )
+                snap = {
+                    "theta": np.asarray(tree["theta"], dtype=float),
+                    "samples": np.asarray(tree["samples"], dtype=float),
+                    "rng_state": extra["rng_state"],
+                }
+            except Exception:  # noqa: BLE001 - disk loss: memory still works
+                pass
+        sampler = self._factory(c)
+        self.samplers[c] = sampler
+        rng = np.random.default_rng()
+        rng.bit_generator.state = snap["rng_state"]
+        self.rngs[c] = rng
+        prefix[c] = np.asarray(snap["samples"])
+        last_snap[c] = len(prefix[c])
+        remaining = max(0, n_samples - len(prefix[c]))
+        chains[c] = ChainState(sampler, snap["theta"], remaining, rng)
+        inflight[c] = {}
+        return True
 
     def _pump(
         self,

@@ -182,6 +182,8 @@ class _Transport:
         read_timeout: float = 30.0,
         retries: int = 2,
         backoff_s: float = 0.05,
+        backoff_cap_s: float = 2.0,
+        backoff_jitter: float = 0.5,
         name: str = "transport",
     ) -> None:
         self.dial = dial
@@ -189,6 +191,9 @@ class _Transport:
         self.read_timeout = read_timeout
         self.retries = max(0, retries)
         self.backoff_s = backoff_s
+        self.backoff_cap_s = backoff_cap_s
+        self.backoff_jitter = min(1.0, max(0.0, backoff_jitter))
+        self._jitter_rng = np.random.default_rng()
         self.name = name
         self._conns: List[Optional[Any]] = [None] * self.n_connections
         self._old: List[Any] = []  # dead conns kept so close() can join them
@@ -228,7 +233,21 @@ class _Transport:
         last: Optional[Exception] = None
         for attempt in range(self.retries + 1):
             if attempt:
-                time.sleep(self.backoff_s * (2 ** (attempt - 1)))
+                # Exponential backoff, capped (a high-retry transport must
+                # not sleep unboundedly long) and jittered *downward* by up
+                # to ``backoff_jitter`` of the delay: when a server restart
+                # kills every client's connections at once, full-strength
+                # synchronized backoff makes them all redial on the same
+                # beat (a reconnect stampede) — randomizing within
+                # [(1 - jitter) * delay, delay] decorrelates the herd while
+                # never waiting longer than the deterministic schedule.
+                delay = min(
+                    self.backoff_cap_s, self.backoff_s * (2 ** (attempt - 1))
+                )
+                time.sleep(
+                    delay
+                    * (1.0 - self.backoff_jitter * self._jitter_rng.random())
+                )
             try:
                 return fn(self._pick())
             except TransportError as exc:
@@ -254,6 +273,9 @@ class _Transport:
 
     # -- the wire API used by RemoteServer / RemoteBatchServer --------------
     def info(self) -> Dict[str, Any]:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def probe(self, timeout: float = 1.0) -> bool:  # pragma: no cover
         raise NotImplementedError
 
     def eval_single(
@@ -302,6 +324,19 @@ class BinaryTransport(_Transport):
     def info(self) -> Dict[str, Any]:
         header, _ = self._call("info", "", (), None)
         return header
+
+    def probe(self, timeout: float = 1.0) -> bool:
+        """One heartbeat frame, SINGLE attempt — no retry, no backoff
+        sleep: the health monitor that calls this schedules its own probe
+        cadence, and a probe that has to redial a dead server should fail
+        fast, not camp a monitor tick on the retry ladder.  Any complete
+        round trip counts as alive (the shell is serving frames)."""
+        try:
+            conn = self._pick()
+            header, _ = conn.roundtrip({"op": "probe", "tag": ""}, (), timeout)
+            return header is not None
+        except (TransportError, OSError):
+            return False
 
     def eval_single(
         self, tag: str, theta: Any, timeout: Optional[float] = None
@@ -431,6 +466,16 @@ class JSONTransport(_Transport):
         out["tags"] = out.get("models", [])
         return out
 
+    def probe(self, timeout: float = 1.0) -> bool:
+        """One ``GET /Info`` heartbeat, single attempt (see
+        :meth:`BinaryTransport.probe` for the no-retry rationale)."""
+        try:
+            conn = self._pick()
+            status, _ = conn.roundtrip("GET", "/Info", None, timeout)
+            return status.startswith("200")
+        except (TransportError, OSError):
+            return False
+
     def eval_single(
         self, tag: str, theta: Any, timeout: Optional[float] = None
     ) -> Tuple[Any, float]:
@@ -516,6 +561,11 @@ class RemoteServer(Server):
         self.last_service_s = service_s
         return result  # Exception instances = per-member failures
 
+    def probe(self) -> bool:
+        """Heartbeat across the transport — the health monitor's remote
+        liveness check (in-process servers inherit the no-op True)."""
+        return self.transport.probe()
+
 
 class RemoteBatchServer(BatchServer):
     """A :class:`~repro.balancer.types.BatchServer` across a socket: the
@@ -561,6 +611,10 @@ class RemoteBatchServer(BatchServer):
                 for i, r in enumerate(rows)
             ]
         return rows
+
+    def probe(self) -> bool:
+        """Heartbeat across the transport (see :meth:`RemoteServer.probe`)."""
+        return self.transport.probe()
 
 
 def remote_servers_for(

@@ -119,6 +119,10 @@ class ServerShell:
         self._started = False
         self._inflight = 0
         self._idle = threading.Condition(self._lock)
+        # Set when stop()'s drain deadline expires: stuck handlers are
+        # abandoned — connection loops stop waiting for their responses
+        # and the worker pool is shut down without joining them.
+        self._abandoned = threading.Event()
         self._pool = ThreadPoolExecutor(
             max_workers=max_workers or max(4, len(self._servers)),
             thread_name_prefix=f"{name}-exec",
@@ -174,6 +178,15 @@ class ServerShell:
     def stop(self, drain: bool = True, timeout: float = 30.0) -> None:
         """Graceful shutdown: stop accepting, let in-flight frames finish,
         join every thread.  With ``drain=False`` behaves like :meth:`kill`.
+
+        The drain is **bounded**: a handler still running ``timeout``
+        seconds after the drain began (wedged solver, deadlocked model) is
+        escalated past — every socket is reset so clients see a clean
+        connection loss (their requests requeue via the dispatcher's
+        death path) and the stuck handler is *abandoned*: its worker
+        thread keeps running, but nothing waits for it and its eventual
+        response is discarded.  Without the escalation one wedged handler
+        would park ``stop()`` forever.
         """
         if not drain:
             self.kill()
@@ -191,15 +204,25 @@ class ServerShell:
         with self._idle:
             while self._inflight > 0 and time.monotonic() < deadline:
                 self._idle.wait(deadline - time.monotonic())
-        self._teardown()
+            stuck = self._inflight > 0
+        if not stuck:
+            self._teardown()
+            return
+        self._reset_conns()  # escalate: clients see connection loss now
+        self._teardown(wait=False)
 
     def kill(self) -> None:
         """Abrupt death (the failure-path tests' machine loss): every
         socket is reset mid-flight; in-flight results are discarded."""
         with self._lock:
             self._stopping = True
-            conns = list(self._conns)
         self._close_listener()
+        self._reset_conns()
+        self._teardown()
+
+    def _reset_conns(self) -> None:
+        with self._lock:
+            conns = list(self._conns)
         for c in conns:
             try:
                 c.shutdown(socket.SHUT_RDWR)
@@ -209,10 +232,15 @@ class ServerShell:
                 c.close()
             except OSError:
                 pass
-        self._teardown()
 
-    def _teardown(self) -> None:
-        self._pool.shutdown(wait=True)
+    def _teardown(self, wait: bool = True) -> None:
+        """Join every thread the shell started.  ``wait=False`` is the
+        abandoned-handler path: connection loops are released from their
+        pending-response waits and the pool is shut down without joining
+        its (stuck) workers — their late results go nowhere."""
+        if not wait:
+            self._abandoned.set()
+        self._pool.shutdown(wait=wait, cancel_futures=not wait)
         if self._accept_thread is not None:
             self._accept_thread.join()
             self._accept_thread = None
@@ -377,9 +405,11 @@ class ServerShell:
                     conn, write_lock, header, arrays, pending_cv, pending,
                 )
         finally:
+            # Poll the abandoned flag: a stuck handler never decrements
+            # pending, and this loop must not outlive stop()'s escalation.
             with pending_cv:
-                while pending[0]:
-                    pending_cv.wait()
+                while pending[0] and not self._abandoned.is_set():
+                    pending_cv.wait(0.2)
 
     def _run_binary(
         self,
@@ -403,6 +433,14 @@ class ServerShell:
                         "tags": self.tags,
                     }
                     payload: List[np.ndarray] = []
+                elif op == "probe":
+                    # Liveness heartbeat for the balancer's health monitor:
+                    # answered from the frame loop's worker without touching
+                    # any exported server (a probe must not queue behind a
+                    # long solve on the server lock).
+                    reply = {"id": rid, "op": "probe", "ok": True,
+                             "name": self.name}
+                    payload = []
                 elif op in ("eval", "eval_batch"):
                     theta = arrays[0]
                     members = list(theta) if op == "eval_batch" else [theta]

@@ -352,6 +352,83 @@ def test_all_chains_failing_raises():
         runner.run(np.zeros(2), 10)
 
 
+def crash_once_factory(crash_after):
+    """Sampler factory whose FIRST incarnation dies after ``crash_after``
+    fine evals; every later incarnation (the auto-resume rebuild) is
+    healthy — a transient node loss."""
+    armed = {"yes": True}
+
+    def factory(c):
+        calls = {"n": 0}
+        this_one_crashes = armed["yes"]
+
+        def flaky_fine(t):
+            calls["n"] += 1
+            if this_one_crashes and calls["n"] > crash_after:
+                armed["yes"] = False
+                raise RuntimeError("transient node loss")
+            return fine(t)
+
+        return MLDASampler([coarse, flaky_fine], GaussianRandomWalk(1.0), [2])
+
+    return factory
+
+
+def test_auto_resume_restarts_chain_from_snapshot():
+    runner = EnsembleRunner(
+        crash_once_factory(12), 1, seed=0, max_restarts=1, checkpoint_every=5
+    )
+    res = runner.run(np.zeros(2), 30)
+    assert res.chains.shape == (1, 30, 2)
+    assert res.failures == {}
+    assert res.restarts == {0: 1}
+
+    # Samples secured before the last pre-crash snapshot are preserved
+    # verbatim: they match the uninterrupted run bit for bit (the same RNG
+    # stream produced them before the crash).
+    clean = EnsembleRunner(
+        lambda c: MLDASampler([coarse, fine], GaussianRandomWalk(1.0), [2]),
+        1,
+        seed=0,
+    ).run(np.zeros(2), 30)
+    assert np.array_equal(res.chains[0][:5], clean.chains[0][:5])
+
+
+def test_auto_resume_budget_exhausted_fails_chain():
+    def factory(c):
+        calls = {"n": 0}
+
+        def fine_for(t):
+            if c == 1:
+                calls["n"] += 1
+                if calls["n"] > 3:
+                    raise RuntimeError("node keeps dying")
+            return fine(t)
+
+        return MLDASampler([coarse, fine_for], GaussianRandomWalk(1.0), [2])
+
+    runner = EnsembleRunner(factory, 2, seed=3, max_restarts=2)
+    res = runner.run(np.zeros(2), 25)
+    assert set(res.failures) == {1}
+    assert res.restarts == {1: 2}  # budget consumed before giving up
+    assert res.chains.shape == (1, 25, 2)  # the healthy chain finished
+
+
+def test_auto_resume_recovers_through_disk_checkpoint(tmp_path):
+    runner = EnsembleRunner(
+        crash_once_factory(12),
+        1,
+        seed=0,
+        max_restarts=1,
+        checkpoint_every=5,
+        checkpoint_dir=str(tmp_path),
+    )
+    res = runner.run(np.zeros(2), 30)
+    assert res.chains.shape == (1, 30, 2)
+    assert res.restarts == {0: 1}
+    assert (tmp_path / "chain_0.npz").exists()  # the snapshot really landed
+
+
 def test_balancer_server_death_fails_only_affected_chains():
     """Through the balancer: fine servers die permanently after a few
     requests -> every chain eventually fails with ServerDiedError-ish

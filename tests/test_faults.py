@@ -1,0 +1,499 @@
+"""Fault tolerance (DESIGN.md §12): chaos harness, self-healing, admission.
+
+Hermetic and deterministic: the chaos harness draws from per-target seeded
+RNGs, its sleeps and clocks are injected fakes, and the health monitor is
+driven synchronously via ``tick()`` with the daemon thread parked on a
+huge ``probe_interval_s`` — no test here depends on wall-clock timing
+except the soak test, which uses real healing on purpose.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.balancer import (
+    BatchServer,
+    DeadlineExceeded,
+    FaultPlan,
+    HealthConfig,
+    InjectedCrash,
+    LoadBalancer,
+    PoisonRequestError,
+    QueueFull,
+    RequestCancelled,
+    Server,
+    ServerDiedError,
+)
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0) -> None:
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def parked_health(clock, **kw):
+    """A HealthConfig whose daemon thread never fires: tests call tick()."""
+    kw.setdefault("probe_interval_s", 1e6)
+    return HealthConfig(clock=clock, **kw)
+
+
+# -- chaos harness determinism -----------------------------------------------
+def run_plan(plan, names, n_calls):
+    """Drive n_calls through each wrapped server, swallowing injections."""
+    servers = {nm: plan.wrap(Server(lambda x: x, name=nm)) for nm in names}
+    for _ in range(n_calls):
+        for nm in names:
+            try:
+                servers[nm].fn(1.0)
+            except InjectedCrash:
+                pass
+
+
+def test_same_seed_same_schedule():
+    mk = lambda: FaultPlan(  # noqa: E731
+        seed=42, p_crash=0.2, p_straggle=0.2, p_nan=0.15, sleep=lambda _s: None
+    )
+    a, b = mk(), mk()
+    run_plan(a, ["s0", "s1"], 40)
+    run_plan(b, ["s0", "s1"], 40)
+    assert a.events == b.events
+    assert a.counts()  # the storm actually injected something
+
+
+def test_schedule_independent_of_wrap_order_and_pool_mates():
+    """Per-target streams are keyed by name, not by wrap order or siblings."""
+    a = FaultPlan(seed=7, p_crash=0.3, sleep=lambda _s: None)
+    b = FaultPlan(seed=7, p_crash=0.3, sleep=lambda _s: None)
+    run_plan(a, ["x", "y"], 30)
+    run_plan(b, ["y", "x", "z"], 30)  # different order, extra sibling
+    per_name = lambda plan, nm: [e for e in plan.events if e[0] == nm]  # noqa: E731
+    assert per_name(a, "x") == per_name(b, "x")
+    assert per_name(a, "y") == per_name(b, "y")
+
+
+def test_crash_on_exact_index_kills_and_requeues():
+    plan = FaultPlan(crash_on={"flaky": [0]})
+    flaky = plan.wrap(Server(lambda x: 2 * x, name="flaky"))
+    ok = Server(lambda x: 2 * x, name="ok")
+    lb = LoadBalancer([flaky, ok], max_retries=2)
+    assert lb.submit(21) == 42  # crashed on flaky (call 0), requeued onto ok
+    assert flaky.dead
+    assert plan.events == [("flaky", 0, "crash")]
+    assert lb.telemetry.fault_count("server_death") == 1
+    assert lb.telemetry.fault_count("requeue") == 1
+    lb.shutdown()
+
+
+def test_nan_injection_poisons_payload():
+    plan = FaultPlan(p_nan=1.0)
+    s = plan.wrap(Server(lambda x: np.array([1.0, 2.0]), name="s"))
+    lb = LoadBalancer([s])
+    out = lb.submit(0.0)
+    assert np.isnan(out[0]) and out[1] == 2.0
+    assert plan.counts() == {"nan": 1}
+    lb.shutdown()
+
+
+def test_nan_on_finite_checked_batch_server_fails_one_member():
+    plan = FaultPlan(p_nan=1.0)
+    s = plan.wrap(
+        BatchServer(
+            lambda st: np.asarray(st, dtype=float) * 2,
+            name="b",
+            check_finite=True,
+        )
+    )
+    lb = LoadBalancer([s])
+    req = lb.submit_async(np.ones(3))
+    with pytest.raises(FloatingPointError):
+        lb.result(req, timeout=5)
+    assert not s.dead  # member failure, not a server death
+    lb.shutdown()
+
+
+def test_straggle_uses_injected_sleep():
+    slept = []
+    plan = FaultPlan(p_straggle=1.0, straggle_s=0.25, sleep=slept.append)
+    s = plan.wrap(Server(lambda x: x, name="slow"))
+    for _ in range(5):
+        s.fn(0.0)
+    assert slept == [0.25] * 5
+    assert plan.counts() == {"straggle": 5}
+
+
+def test_max_crashes_bounds_the_storm():
+    plan = FaultPlan(p_crash=1.0, max_crashes=2)
+    s = plan.wrap(Server(lambda x: x, name="s"))
+    outcomes = []
+    for _ in range(5):
+        try:
+            s.fn(0.0)
+            outcomes.append("ok")
+        except InjectedCrash:
+            outcomes.append("crash")
+    assert outcomes == ["crash", "crash", "ok", "ok", "ok"]
+
+
+# -- self-healing: quarantine -> probe -> probation -> live ------------------
+def test_quarantine_probe_readmission_cycle():
+    clock = FakeClock()
+    plan = FaultPlan(crash_on={"a": [0]}, down_s=5.0, clock=clock)
+    a = plan.wrap(Server(lambda x: 2 * x, name="a"))
+    b = Server(lambda x: 2 * x, name="b")
+    cfg = parked_health(clock, quarantine_backoff_s=1.0, probation_s=2.0)
+    lb = LoadBalancer([a, b], health=cfg, max_retries=2)
+    try:
+        assert lb.submit(3) == 6  # kills a, lands on b
+        assert a.lifecycle == "quarantined"
+        assert a in lb.health.quarantined()
+        assert lb.telemetry.fault_count("server_death") == 1
+
+        clock.advance(1.0)
+        lb.health.tick()  # probe fails: a is inside its outage window
+        assert a.lifecycle == "quarantined" and a.dead
+
+        clock.advance(6.0)  # past down_s: the outage is over
+        lb.health.tick()
+        assert a.lifecycle == "probation" and not a.dead
+        assert lb.telemetry.fault_count("readmission") >= 1
+
+        lb.retire_server("b")
+        assert lb.submit(5) == 10  # only a can have served this
+        assert a.stats.n_requests >= 1
+
+        clock.advance(2.0)
+        lb.health.tick()  # probation over: promoted
+        assert a.lifecycle == "live"
+        assert lb.health.quarantined() == []
+    finally:
+        lb.shutdown()
+
+
+def test_failed_probes_escalate_backoff():
+    clock = FakeClock()
+    plan = FaultPlan(crash_on={"a": [0]}, down_s=1e9, clock=clock)
+    a = plan.wrap(Server(lambda x: x, name="a"))
+    b = Server(lambda x: x, name="b")
+    cfg = parked_health(
+        clock, quarantine_backoff_s=1.0, backoff_factor=2.0, backoff_cap_s=4.0
+    )
+    lb = LoadBalancer([a, b], health=cfg, max_retries=2)
+    try:
+        lb.submit(0)
+        entry = lb.health._entries[id(a)]
+        assert entry.next_probe_at == pytest.approx(1.0)
+        for expected in (2.0, 4.0, 4.0):  # doubling, then capped
+            clock.t = entry.next_probe_at
+            lb.health.tick()
+            assert entry.backoff_s == pytest.approx(expected)
+    finally:
+        lb.shutdown()
+
+
+def test_waitable_tag_queues_through_outage_instead_of_dying():
+    """A tag whose only server is quarantined waits for the healing."""
+    clock = FakeClock()
+    plan = FaultPlan(crash_on={"solo": [0]}, clock=clock)  # down_s=0: heals
+    solo = plan.wrap(Server(lambda x: 2 * x, name="solo", capacity_tags=("t",)))
+    other = Server(lambda x: x, name="other", capacity_tags=("u",))
+    cfg = parked_health(clock, quarantine_backoff_s=0.5, probation_s=1.0)
+    lb = LoadBalancer([solo, other], health=cfg, max_retries=3)
+    try:
+        req = lb.submit_async(21, tag="t")  # kills solo, requeues, waits
+        time.sleep(0.05)
+        assert not req.done.is_set()
+        late = lb.submit_async(4, tag="t")  # admitted while quarantined
+        assert late.error is None
+
+        clock.advance(0.5)
+        lb.health.tick()  # probe passes, solo re-admitted, queue drains
+        assert lb.result(req, timeout=5) == 42
+        assert lb.result(late, timeout=5) == 8
+    finally:
+        lb.shutdown()
+
+
+def test_unwaitable_tag_still_rejected_without_health():
+    lb = LoadBalancer([Server(lambda x: x, capacity_tags=("t",))])
+    req = lb.submit_async(1, tag="nope")
+    with pytest.raises(RuntimeError, match="no live server"):
+        lb.result(req)
+    assert lb.telemetry.fault_count("rejected") == 1
+    lb.shutdown()
+
+
+def test_retired_servers_are_never_quarantined():
+    clock = FakeClock()
+    a = Server(lambda x: x, name="a")
+    lb = LoadBalancer([a, Server(lambda x: x, name="b")],
+                      health=parked_health(clock))
+    try:
+        lb.retire_server("a")
+        lb.health.quarantine(a)
+        assert a.lifecycle == "retired"
+        assert lb.health.quarantined() == []
+        assert not lb.readmit_server(a)  # retirement is terminal
+    finally:
+        lb.shutdown()
+
+
+# -- circuit breaker ---------------------------------------------------------
+def bad_then_good_pool():
+    def bad_batch(stacked):
+        return [ValueError("poisoned member") for _ in stacked]
+
+    bad = BatchServer(lambda st: None, name="bad", capacity_tags=("t",))
+    bad.batch_call = bad_batch
+    good = Server(lambda x: 2 * x, name="good", capacity_tags=("t",))
+    return bad, good
+
+
+def test_breaker_opens_route_and_half_opens_after_cooldown():
+    clock = FakeClock()
+    bad, good = bad_then_good_pool()
+    cfg = parked_health(clock, breaker_threshold=2, breaker_cooldown_s=3.0)
+    lb = LoadBalancer([bad, good], health=cfg)
+    try:
+        # fifo rotates over least-recently-freed servers, so sequential
+        # submits alternate bad/good; after bad's 2nd member failure the
+        # (bad, 't') route opens.
+        failures = 0
+        for _ in range(8):
+            if lb.health.has_open_breakers():
+                break
+            req = lb.submit_async(1, tag="t")
+            try:
+                lb.result(req, timeout=5)
+            except ValueError:
+                failures += 1
+        assert failures == 2
+        assert lb.health.has_open_breakers()
+        assert [r["server"] for r in lb.health.open_routes()] == ["bad"]
+        assert lb.telemetry.fault_count("breaker_open", "t") == 1
+
+        n_bad = bad.stats.n_requests
+        for i in range(4):  # open route sheds: everything lands on good
+            assert lb.submit(i, tag="t") == 2 * i
+        assert bad.stats.n_requests == n_bad
+
+        clock.advance(3.5)
+        lb.health.tick()  # cooldown over: half-open, one fresh chance
+        assert not lb.health.has_open_breakers()
+        # bad is now the least-recently-freed free server: fifo tries it
+        req = lb.submit_async(1, tag="t")
+        with pytest.raises(ValueError):
+            lb.result(req, timeout=5)
+        assert bad.stats.n_requests == n_bad + 1
+    finally:
+        lb.shutdown()
+
+
+def test_breaker_success_resets_count():
+    clock = FakeClock()
+    flaky_results = iter([False, True, False, False])
+
+    def batch(stacked):
+        ok = next(flaky_results)
+        return [
+            np.asarray(s) if ok else ValueError("member fault")
+            for s in stacked
+        ]
+
+    s = BatchServer(lambda st: None, name="s", capacity_tags=("t",))
+    s.batch_call = batch
+    cfg = parked_health(clock, breaker_threshold=2)
+    lb = LoadBalancer([s], health=cfg)
+    try:
+        # fail, success (resets), fail, fail -> only then does it open
+        for should_raise in (True, False, True, True):
+            req = lb.submit_async(np.ones(2), tag="t")
+            if should_raise:
+                with pytest.raises(ValueError):
+                    lb.result(req, timeout=5)
+            else:
+                lb.result(req, timeout=5)
+        assert lb.health.has_open_breakers()
+    finally:
+        lb.shutdown()
+
+
+# -- poison requests ---------------------------------------------------------
+def test_poison_request_stops_at_threshold():
+    servers = [
+        Server((lambda x: (_ for _ in ()).throw(RuntimeError("boom"))),
+               name=f"s{i}")
+        for i in range(3)
+    ]
+    lb = LoadBalancer(servers, max_retries=10, poison_threshold=2)
+    req = lb.submit_async(1)
+    with pytest.raises(PoisonRequestError):
+        lb.result(req, timeout=5)
+    assert sum(s.dead for s in servers) == 2  # the third survives
+    assert lb.telemetry.fault_count("poison") == 1
+    lb.shutdown()
+
+
+def test_retries_exhausted_without_poison_threshold():
+    lb = LoadBalancer(
+        [Server(lambda x: (_ for _ in ()).throw(RuntimeError("boom")))],
+        max_retries=0,
+    )
+    req = lb.submit_async(1)
+    with pytest.raises(ServerDiedError):
+        lb.result(req, timeout=5)
+    assert lb.telemetry.fault_count("retries_exhausted") == 1
+    lb.shutdown()
+
+
+# -- admission control -------------------------------------------------------
+def occupied_balancer(**kw):
+    """One server parked on a gate; returns (lb, gate, parked request)."""
+    gate = threading.Event()
+
+    def fn(x):
+        gate.wait(5)
+        return 2 * x
+
+    lb = LoadBalancer([Server(fn, name="s")], **kw)
+    parked = lb.submit_async(0)
+    deadline = time.monotonic() + 5
+    while parked.server is None and time.monotonic() < deadline:
+        time.sleep(0.001)  # wait for the inline dispatch to take the server
+    return lb, gate, parked
+
+
+def test_queue_full_sheds_at_admission():
+    lb, gate, parked = occupied_balancer(max_queue_per_tag=2)
+    try:
+        queued = [lb.submit_async(i) for i in (1, 2)]
+        shed = lb.submit_async(3)
+        with pytest.raises(QueueFull):
+            lb.result(shed)
+        assert lb.telemetry.fault_count("queue_full") == 1
+        gate.set()
+        assert [lb.result(r, timeout=5) for r in queued] == [2, 4]
+        assert lb.result(parked, timeout=5) == 0
+        # shed submissions are never booked as traffic
+        assert lb.summary()["n_requests"] == 3
+    finally:
+        gate.set()
+        lb.shutdown()
+
+
+def test_submit_many_overflow_is_all_or_nothing():
+    lb, gate, parked = occupied_balancer(max_queue_per_tag=2)
+    try:
+        reqs = lb.submit_many([1, 2, 3])  # 3 > bound: the whole batch sheds
+        for r in reqs:
+            with pytest.raises(QueueFull):
+                lb.result(r)
+        assert lb.telemetry.fault_count("queue_full") == 3
+        assert lb.submit_many([4, 5])[0].error is None  # a fitting batch lands
+    finally:
+        gate.set()
+        lb.shutdown()
+
+
+def test_deadline_shedding_drops_stale_queued_request():
+    lb, gate, parked = occupied_balancer()
+    try:
+        stale = lb.submit_async(1, deadline_s=0.01)
+        fresh = lb.submit_async(2, deadline_s=60.0)
+        time.sleep(0.05)  # let the stale deadline pass while queued
+        gate.set()
+        with pytest.raises(DeadlineExceeded):
+            lb.result(stale, timeout=5)
+        assert lb.result(fresh, timeout=5) == 4
+        assert lb.telemetry.fault_count("deadline_shed") == 1
+    finally:
+        gate.set()
+        lb.shutdown()
+
+
+def test_dispatched_requests_never_shed():
+    """A deadline bounds queue time only: once dispatched, it runs."""
+    lb = LoadBalancer([Server(lambda x: time.sleep(0.1) or 2 * x)])
+    # dispatched inline (free server) well before the deadline, which then
+    # expires mid-service — the evaluation still runs to completion.
+    req = lb.submit_async(5, deadline_s=0.02)
+    assert lb.result(req, timeout=5) == 10
+    assert lb.telemetry.fault_count("deadline_shed") == 0
+    lb.shutdown()
+
+
+# -- cancel racing inline dispatch (satellite) -------------------------------
+def test_cancel_race_exactly_one_outcome_no_double_booking():
+    lb = LoadBalancer([Server(lambda x: 2 * x, name="s")])
+    n, n_cancelled, n_completed = 300, 0, 0
+    try:
+        for i in range(n):
+            # ``hold`` usually occupies the lone server, so ``victim`` sits
+            # queued while the freeing worker races this thread's cancel —
+            # sometimes the cancel wins, sometimes the inline dispatch does.
+            hold = lb.submit_async(i)
+            victim = lb.submit_async(i)
+            won = lb.cancel(victim)
+            assert lb.result(hold, timeout=5) == 2 * i
+            n_completed += 1
+            if won:
+                n_cancelled += 1
+                with pytest.raises(RequestCancelled):
+                    lb.result(victim, timeout=5)
+            else:
+                assert lb.result(victim, timeout=5) == 2 * i
+                n_completed += 1
+        assert n_cancelled + n_completed == 2 * n
+        # no double booking: completed requests appear exactly once in the
+        # timeline, cancelled ones never do, and no fault counter moved.
+        assert len(lb.timeline()) == n_completed
+        assert lb.summary()["fault_counters"] == {}
+    finally:
+        lb.shutdown()
+
+
+# -- seeded fault storm soak (real clock, real healing) ----------------------
+def test_chaos_soak_zero_lost_requests_and_pool_recovers():
+    plan = FaultPlan(seed=1234, p_crash=0.04, p_straggle=0.1,
+                     straggle_s=0.001, down_s=0.0)
+    servers = plan.wrap_all(
+        [Server(lambda x: 2 * x, name=f"s{i}") for i in range(4)]
+    )
+    cfg = HealthConfig(
+        probe_interval_s=0.005, quarantine_backoff_s=0.005, probation_s=0.02
+    )
+    lb = LoadBalancer(servers, health=cfg, max_retries=100)
+    try:
+        reqs = [lb.submit_async(i) for i in range(300)]
+        outcomes = [lb.result(r, timeout=30) for r in reqs]  # zero lost
+        assert outcomes == [2 * i for i in range(300)]
+        assert plan.counts().get("crash", 0) > 0  # the storm really blew
+
+        deadline = time.monotonic() + 10
+        while time.monotonic() < deadline:  # full pool recovery
+            if all(not s.dead for s in servers):
+                break
+            time.sleep(0.01)
+        assert all(not s.dead for s in servers)
+        s = lb.summary()
+        assert sum(s["fault_counters"]["server_death"].values()) >= 1
+        assert sum(s["fault_counters"]["readmission"].values()) >= 1
+    finally:
+        lb.shutdown()
+
+
+def test_stats_table_has_fault_columns():
+    plan = FaultPlan(crash_on={"a": [0]})
+    a = plan.wrap(Server(lambda x: x, name="a"))
+    lb = LoadBalancer([a, Server(lambda x: x, name="b")], max_retries=1)
+    lb.submit(1, tag="t")
+    rows = {row["tag"]: row for row in lb.stats_table()}
+    assert rows["t"]["n_deaths"] == 1
+    assert rows["t"]["n_requeues"] == 1
+    lb.shutdown()

@@ -455,6 +455,114 @@ def test_graceful_drain_ships_inflight_results(leak_check):
     tr.close()
 
 
+def test_drain_deadline_abandons_stuck_handler(leak_check):
+    """A wedged handler cannot park stop(): past the drain deadline the
+    shell resets its sockets and abandons the worker (satellite of
+    DESIGN.md §12's fault model)."""
+    entered = threading.Event()
+    release = threading.Event()
+
+    def stuck(stacked):
+        entered.set()
+        release.wait(30)
+        return _f(stacked)
+
+    shell = make_shell(
+        [BatchServer(stuck, name="s", capacity_tags=("gp",))], name="stuck"
+    )
+    tr = make_transport(shell, binary=True, retries=0)
+
+    def call():
+        try:
+            tr.eval_single("gp", np.ones(3, dtype=np.float32))
+        except (TransportError, ConnectionError):
+            pass  # the client sees a clean connection loss
+
+    t = threading.Thread(target=call)
+    t.start()
+    try:
+        assert entered.wait(5)
+        t0 = time.monotonic()
+        shell.stop(drain=True, timeout=0.2)  # handler never returns
+        assert time.monotonic() - t0 < 5.0, "stop() parked on a wedged handler"
+        t.join(5)
+        assert not t.is_alive()
+    finally:
+        release.set()  # unwedge the abandoned worker so it can run out
+        t.join(5)
+        tr.close()
+
+
+# -- health probes over the wire ----------------------------------------------
+def test_probe_heartbeat_binary_and_json(leak_check):
+    shell = make_shell(local_pool(), name="probe")
+    with make_transport(shell, binary=True) as btr:
+        assert btr.probe()
+    with make_transport(shell, binary=False) as jtr:
+        assert jtr.probe()
+    shell.stop()
+
+
+def test_remote_server_probe_tracks_shell_liveness(leak_check):
+    shell = make_shell(local_pool(), name="probe-live")
+    tr = make_transport(shell, binary=True)
+    server = remote_servers_for(tr)[0]
+    assert server.probe()  # alive: the heartbeat frame round-trips
+    shell.kill()
+    assert not server.probe()  # dead: single attempt, no retry ladder
+    tr.close()
+
+
+def test_probe_does_not_disturb_pipelined_traffic(leak_check):
+    delay = 0.05
+
+    def slow(stacked):
+        time.sleep(delay)
+        return _f(stacked)
+
+    shell = make_shell(
+        [BatchServer(slow, name="s", capacity_tags=("gp",))], name="probe-mix"
+    )
+    with make_transport(shell, binary=True, n_connections=1) as tr:
+        out = {}
+
+        def call():
+            out["row"] = tr.eval_single("gp", np.ones(3, dtype=np.float32))[0]
+
+        t = threading.Thread(target=call)
+        t.start()
+        time.sleep(delay / 5)
+        # probe answered from the frame loop while the eval is in flight
+        assert tr.probe()
+        t.join(5)
+        expect = _f(np.ones((1, 3), dtype=np.float32))[0]
+        assert out["row"].tobytes() == expect.tobytes()
+    shell.stop()
+
+
+# -- redial backoff: capped + jittered ----------------------------------------
+def test_backoff_delays_capped_and_jittered_downward(monkeypatch):
+    from repro.net import BinaryTransport
+
+    def refuse():
+        raise OSError("connection refused")
+
+    delays = []
+    monkeypatch.setattr(time, "sleep", delays.append)
+    tr = BinaryTransport(
+        refuse, retries=4, backoff_s=0.1, backoff_cap_s=0.25, backoff_jitter=0.5
+    )
+    with pytest.raises(TransportError):
+        tr.eval_single("gp", np.zeros(3, dtype=np.float32))
+    # deterministic schedule 0.1, 0.2, 0.4->cap, 0.8->cap; jitter only
+    # shortens (never lengthens) each delay, by at most backoff_jitter.
+    schedule = [0.1, 0.2, 0.25, 0.25]
+    assert len(delays) == len(schedule)
+    for observed, nominal in zip(delays, schedule):
+        assert 0.5 * nominal <= observed <= nominal
+    tr.close()
+
+
 def test_deprecated_core_balancer_shim_warns():
     import importlib
     import sys
