@@ -54,7 +54,10 @@ from .types import (
     DecodePool,
     DecodeResult,
     DecodeSlot,
+    PagedDecodePool,
+    PagedSlot,
     PoisonRequestError,
+    PromptTooLongError,
     QueueFull,
     Request,
     RequestCancelled,
@@ -85,7 +88,10 @@ __all__ = [
     "LoadBalancer",
     "P2Quantile",
     "POLICIES",
+    "PagedDecodePool",
+    "PagedSlot",
     "PoisonRequestError",
+    "PromptTooLongError",
     "PolicyContext",
     "PowerOfTwoPolicy",
     "QueueFull",

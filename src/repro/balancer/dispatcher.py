@@ -54,6 +54,7 @@ from .telemetry import Telemetry
 from .types import (
     DeadlineExceeded,
     PoisonRequestError,
+    PromptTooLongError,
     QueueFull,
     Request,
     RequestCancelled,
@@ -1050,7 +1051,7 @@ class LoadBalancer:
         complete, queued ones error).
         """
         try:
-            done = server.admit(req, req.dispatched_at)
+            done = self._admit_one(req, server, req.dispatched_at)
             if done is not None:
                 self._complete_slot(done, server)
             while server.n_occupied:
@@ -1063,6 +1064,9 @@ class LoadBalancer:
                 self._telemetry.record_occupancy(
                     server.name, n_emitted, server.n_slots
                 )
+                usage = server.block_usage()
+                if usage is not None:
+                    self._telemetry.record_blocks(server.name, *usage)
                 for info in finished:
                     self._complete_slot(info, server)
         except Exception:  # noqa: BLE001 - pool fault kills the pool
@@ -1070,24 +1074,39 @@ class LoadBalancer:
             return None
         return self._free_server(server)
 
+    def _admit_one(self, req: Request, server: Server, now: float):
+        """Admit one request into a pool, converting the typed
+        never-fits rejection into a per-request failure (the pool lives
+        on; a pool-killing fault would re-raise past this)."""
+        try:
+            return server.admit(req, now)
+        except PromptTooLongError as exc:
+            self._telemetry.record_fault("rejected", req.tag)
+            req.completed_at = time.monotonic()
+            req.error = exc
+            req._complete()
+            return None
+
     def _admit_queued(self, server: Server, tag: str) -> None:
-        """Drain up to ``server.n_free`` queued ``tag`` requests into free
-        slots, in arrival order (FIFO admission).  No-op under shutdown —
-        queued requests are failed by the shutdown sweep instead."""
-        free = server.n_free
-        if free <= 0:
-            return
-        with self._cv:
-            if self._shutdown:
-                return
-            extra = self._queue.drain_tag_limit(tag, free)
-        if not extra:
-            return
-        now = time.monotonic()
-        for r in extra:
-            r.dispatched_at = now
-            r.server = server.name
-            done = server.admit(r, now)
+        """Join queued ``tag`` requests into free slots, in arrival order
+        (FIFO admission).  Paged pools add a block-granular gate: when the
+        queue *head* does not fit the currently free blocks, admission
+        stops — the head is never skipped in favour of a smaller request
+        behind it, so arrival order is preserved and the head cannot
+        starve.  No-op under shutdown — queued requests are failed by the
+        shutdown sweep instead."""
+        while server.n_free > 0:
+            with self._cv:
+                if self._shutdown:
+                    return
+                head = self._queue.head(tag)
+                if head is None or not server.admissible(head.theta):
+                    return
+                self._queue.pop(head)
+            now = time.monotonic()
+            head.dispatched_at = now
+            head.server = server.name
+            done = self._admit_one(head, server, now)
             if done is not None:
                 self._complete_slot(done, server)
 

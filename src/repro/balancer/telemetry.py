@@ -154,6 +154,10 @@ class Telemetry:
         self._tag_tokens: Dict[str, int] = {}
         self._tag_done: Dict[str, int] = {}
         self._occupancy: Dict[str, Dict[str, float]] = {}
+        # paged serving: per-pool KV-block occupancy, per-tag speculative
+        # draft/accept counters
+        self._blocks: Dict[str, Dict[str, float]] = {}
+        self._spec: Dict[str, Dict[str, int]] = {}
         # remote serving: per-(server, tag) wire vs service split
         self._wire: Dict[tuple, Dict[str, float]] = {}
         # fault counters, keyed (kind, tag): server deaths, requeues,
@@ -268,6 +272,28 @@ class Telemetry:
                 occ["capacity"] = float(capacity)
                 al = self._ewma_alpha
                 occ["ewma"] = (1 - al) * occ["ewma"] + al * (occupied / capacity)
+            elif kind == "blocks":
+                used, capacity = b
+                blk = self._blocks.get(a)
+                if blk is None:
+                    blk = self._blocks[a] = {
+                        "steps": 0, "block_steps": 0.0,
+                        "capacity": float(capacity),
+                        "ewma": used / capacity,
+                    }
+                blk["steps"] += 1
+                blk["block_steps"] += used
+                blk["capacity"] = float(capacity)
+                al = self._ewma_alpha
+                blk["ewma"] = (1 - al) * blk["ewma"] + al * (used / capacity)
+            elif kind == "spec":
+                accepted, drafted = b
+                sp = self._spec.get(a)
+                if sp is None:
+                    sp = self._spec[a] = {"rounds": 0, "accepted": 0, "drafted": 0}
+                sp["rounds"] += 1
+                sp["accepted"] += accepted
+                sp["drafted"] += drafted
             else:  # "batch_size"
                 hist = self._batch_hist.setdefault(a, {})
                 hist[b] = hist.get(b, 0) + 1
@@ -331,6 +357,23 @@ class Telemetry:
         into a per-server EWMA + running mean — the 'how full does the
         fused step run' metric BENCH_serve.json reports."""
         self._pending.append(("occupancy", server, (occupied, capacity)))
+        self._maybe_fold()
+
+    def record_blocks(self, server: str, used: int, capacity: int) -> None:
+        """Book one token boundary's KV-block occupancy for a paged pool:
+        ``used`` of ``capacity`` blocks are leased to in-flight slots.
+        The block-granular analogue of :meth:`record_occupancy` — together
+        they show whether a pool is slot-bound or memory-bound."""
+        if capacity > 0:
+            self._pending.append(("blocks", server, (used, capacity)))
+            self._maybe_fold()
+
+    def record_spec(self, tag: str, accepted: int, drafted: int) -> None:
+        """Book one speculative-decoding round: ``drafted`` draft tokens
+        proposed, ``accepted`` of them verified (accepted-prefix rule).
+        Folded into per-tag totals; the accept *rate* is the number that
+        says whether the draft model is paying for itself."""
+        self._pending.append(("spec", tag, (accepted, drafted)))
         self._maybe_fold()
 
     def record_wire(
@@ -522,6 +565,28 @@ class Telemetry:
                 }
                 for name, occ in self._occupancy.items()
             }
+            stats["block_occupancy"] = {
+                name: {
+                    "mean": blk["block_steps"] / (blk["steps"] * blk["capacity"])
+                    if blk["steps"]
+                    else 0.0,
+                    "ewma": blk["ewma"],
+                    "steps": blk["steps"],
+                    "capacity": int(blk["capacity"]),
+                }
+                for name, blk in self._blocks.items()
+            }
+            stats["spec_accept"] = {
+                tag: {
+                    "rounds": sp["rounds"],
+                    "accepted": sp["accepted"],
+                    "drafted": sp["drafted"],
+                    "rate": sp["accepted"] / sp["drafted"]
+                    if sp["drafted"]
+                    else 0.0,
+                }
+                for tag, sp in self._spec.items()
+            }
         return stats
 
     def stats_table(self) -> List[Dict[str, Any]]:
@@ -540,6 +605,7 @@ class Telemetry:
             tags = sorted(
                 set(self._tag_done)
                 | set(self._tag_tokens)
+                | set(self._spec)
                 | {t for _k, t in self._faults}
             )
             wire_by_tag: Dict[str, float] = {}
@@ -568,6 +634,11 @@ class Telemetry:
                         + fault("rejected", tag)
                     ),
                     "n_readmitted": fault("readmission", tag),
+                    "spec_accept_rate": (
+                        self._spec[tag]["accepted"] / self._spec[tag]["drafted"]
+                        if tag in self._spec and self._spec[tag]["drafted"]
+                        else None
+                    ),
                 }
                 for tag in tags
             ]

@@ -490,6 +490,277 @@ class DecodePool(Server):
         self._free_slots = list(range(self.n_slots))
         return infos
 
+    # -- admission hooks (refined by PagedDecodePool) ------------------------
+    def admissible(self, theta: Any) -> bool:
+        """Can this pool take ``theta`` *right now*?  Slab pools are
+        slot-granular: a free slot (which the dispatcher already checked)
+        is sufficient."""
+        return True
+
+    def block_usage(self) -> Optional[Tuple[int, int]]:
+        """(used, capacity) KV blocks, or None for slab/non-paged pools."""
+        return None
+
+
+@dataclass
+class PagedSlot(DecodeSlot):
+    """A :class:`DecodeSlot` whose generation runs prefill *through the
+    pool* in chunks and whose KV lives in leased block-table rows."""
+
+    prompt: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    fed: int = 0  # prompt positions already chunked through the model
+    blocks: List[int] = field(default_factory=list)  # leased pool rows
+
+    @property
+    def prefilling(self) -> bool:
+        return self.fed < len(self.prompt)
+
+    @property
+    def finished(self) -> bool:
+        # Until prefill completes no token has been emitted — the slot
+        # cannot be finished no matter how small the budget.
+        return bool(self.tokens) and (
+            len(self.tokens) >= self.max_new
+            or (self.eos is not None and self.tokens[-1] == self.eos)
+        )
+
+
+class PagedDecodePool(DecodePool):
+    """A decode pool over a shared KV block pool with chunked prefill.
+
+    Differences from the slab :class:`DecodePool`:
+
+    * **Theta contract**: requests carry the raw ``(prompt (1, S), n_new,
+      eos)`` tuple, not a :class:`DecodeHandoff` — prefill happens *inside*
+      the pool, ``prefill_chunk`` positions per token boundary, interleaved
+      with in-flight decode steps.  No separate prefill server monopolizes
+      the device between joins.
+    * **Block-granular admission**: a request joins when a slot AND enough
+      free KV blocks for its maximum extent (``S + n_new - 1`` positions)
+      exist.  :meth:`admissible` is the dispatcher's head-of-line gate —
+      the queue head waits (FIFO preserved) rather than being skipped.
+      A request that can *never* fit raises :class:`PromptTooLongError`
+      at admission, failing that request without killing the pool.
+    * Blocks are leased at admission and returned at eviction (EOS frees
+      early) or pool death; ``block_usage()`` feeds telemetry.
+
+    Model wiring (see ``runtime.serve_loop.make_paged_decode_pool``):
+
+    * ``step_fn(state, tokens, active) -> (state, next_tokens)`` — one
+      fused decode step; ``active`` masks slots still prefilling or free.
+    * ``chunk_fn(state, slot, chunk, start_pos) -> (state, last_token)`` —
+      feed ``slot`` one prompt chunk.
+    * ``reset_fn(state, slot, row) -> state`` — lease block-table ``row``
+      to ``slot`` and rewind its position.
+
+    ``n_blocks`` counts *usable* blocks; the device pool carries one extra
+    scratch row (row 0) that inactive slots write into, so usable rows are
+    ``1..n_blocks``.  Pools for O(1)-state families (ssm) pass
+    ``n_blocks=0``: every request needs zero blocks and admission is
+    slot-granular, but chunked prefill still applies.
+    """
+
+    def __init__(
+        self,
+        step_fn: Callable,
+        chunk_fn: Callable,
+        reset_fn: Callable,
+        init_state_fn: Callable,
+        n_slots: int,
+        *,
+        n_blocks: int,
+        block_size: int,
+        max_blocks_per_slot: int,
+        max_positions: int,
+        prefill_chunk: int,
+        name: Optional[str] = None,
+        capacity_tags: Sequence[str] = (),
+        clock: Callable[[], float] = time.monotonic,
+    ) -> None:
+        super().__init__(
+            step_fn,
+            insert_fn=None,
+            init_state_fn=init_state_fn,
+            n_slots=n_slots,
+            name=name,
+            capacity_tags=capacity_tags,
+            clock=clock,
+        )
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        self.chunk_fn = chunk_fn
+        self.reset_fn = reset_fn
+        self.n_blocks = int(n_blocks)
+        self.block_size = int(block_size)
+        self.max_blocks_per_slot = int(max_blocks_per_slot)
+        self.max_positions = int(max_positions)
+        self.prefill_chunk = int(prefill_chunk)
+        self.paged_kv = self.n_blocks > 0
+        # Usable device rows are 1..n_blocks; row 0 is the scratch block.
+        self._free_blocks: List[int] = list(range(1, self.n_blocks + 1))
+
+    # -- admission -----------------------------------------------------------
+    @staticmethod
+    def _parse_theta(theta) -> Tuple[np.ndarray, int, Optional[int]]:
+        prompt, n_new, eos = theta
+        prompt = np.asarray(prompt, dtype=np.int64).reshape(-1)
+        return prompt, int(n_new), None if eos is None else int(eos)
+
+    def blocks_needed(self, prompt_len: int, n_new: int) -> int:
+        """Blocks for the request's maximum extent.
+
+        Positions written = prompt (``S``) + fed-back tokens (``n_new - 1``;
+        the final emitted token is never fed back).
+        """
+        if not self.paged_kv:
+            return 0
+        need = max(1, prompt_len + n_new - 1)
+        return -(-need // self.block_size)  # ceil
+
+    def _never_fits(self, prompt_len: int, n_new: int) -> bool:
+        need = max(1, prompt_len + n_new - 1)
+        return need > self.max_positions or self.blocks_needed(
+            prompt_len, n_new
+        ) > self.n_blocks
+
+    def admissible(self, theta: Any) -> bool:
+        """True when ``theta`` could join at this token boundary.
+
+        Never-fitting requests report admissible so the dispatcher pops
+        them and :meth:`admit` can fail them with the typed error —
+        otherwise they would park at the queue head forever.
+        """
+        prompt, n_new, _ = self._parse_theta(theta)
+        if self._never_fits(len(prompt), n_new):
+            return True
+        return len(self._free_blocks) >= self.blocks_needed(len(prompt), n_new)
+
+    def admit(self, req: "Request", now: float) -> Optional[DecodeSlot]:
+        """Lease a slot + blocks and start chunked prefill.
+
+        Unlike the slab pool there is no instant-finish path: even a
+        one-token budget needs the prompt prefillled first, so this always
+        returns None (the first token is emitted by a later
+        :meth:`step_once`).  Raises :class:`PromptTooLongError` for
+        requests that can never fit; the caller fails the request and the
+        pool lives on.
+        """
+        prompt, n_new, eos = self._parse_theta(req.theta)
+        if len(prompt) < 1:
+            raise PromptTooLongError(
+                f"empty prompt submitted to paged pool '{self.name}'"
+            )
+        nb = self.blocks_needed(len(prompt), n_new)
+        if self._never_fits(len(prompt), n_new):
+            need = max(1, len(prompt) + n_new - 1)
+            raise PromptTooLongError(
+                f"request needs {need} cache positions ({nb} blocks) but "
+                f"pool '{self.name}' caps at {self.max_positions} positions "
+                f"/ {self.n_blocks} blocks"
+            )
+        if len(self._free_blocks) < nb or not self._free_slots:
+            raise RuntimeError(
+                f"admit() without capacity on '{self.name}' "
+                f"(free_blocks={len(self._free_blocks)}, need={nb}, "
+                f"free_slots={len(self._free_slots)})"
+            )
+        slot = self._free_slots.pop(0)  # lowest index: deterministic layout
+        blocks = [self._free_blocks.pop(0) for _ in range(nb)]
+        # Unleased table entries point at the scratch row; they are only
+        # ever gathered at positions masked out by ``pos``.
+        row = np.zeros(self.max_blocks_per_slot, dtype=np.int32)
+        row[: len(blocks)] = blocks
+        if self._state is None:
+            self._state = self.init_state_fn()
+        self._state = self.reset_fn(self._state, slot, row)
+        info = PagedSlot(
+            req=req,
+            slot=slot,
+            tokens=[],
+            times=[],
+            max_new=n_new,
+            eos=eos,
+            prompt=prompt,
+            fed=0,
+            blocks=blocks,
+        )
+        self._slots[slot] = info
+        self.admit_log.append((slot, req))
+        return None
+
+    # -- stepping ------------------------------------------------------------
+    def _evict(self, slot: int, info: PagedSlot) -> None:
+        self._slots[slot] = None
+        self._free_slots.append(slot)
+        self._free_slots.sort()
+        self._free_blocks.extend(info.blocks)
+        self._free_blocks.sort()
+        info.blocks = []
+
+    def step_once(self) -> Tuple[List[DecodeSlot], int]:
+        """One token boundary: a prefill chunk per prefilling slot, then
+        ONE fused decode step over the decoding slots.
+
+        A slot whose prompt completes this boundary emits its first token
+        (argmax of the prefill — the TTFT stamp) and joins the fused
+        decode step of this same boundary.
+        """
+        finished: List[DecodeSlot] = []
+        n_emitted = 0
+        for slot, info in enumerate(self._slots):
+            if info is None or not info.prefilling:
+                continue
+            chunk = info.prompt[info.fed : info.fed + self.prefill_chunk]
+            self._state, tok = self.chunk_fn(self._state, slot, chunk, info.fed)
+            info.fed += len(chunk)
+            if info.prefilling:
+                continue
+            info.tokens.append(int(tok))
+            info.times.append(self.clock())
+            n_emitted += 1
+            if info.finished:
+                self._evict(slot, info)
+                finished.append(info)
+            else:
+                self._next_tokens[slot] = info.tokens[-1]
+
+        active = np.array(
+            [info is not None and not info.prefilling for info in self._slots],
+            dtype=bool,
+        )
+        if active.any():
+            self._state, nxt = self.step_fn(
+                self._state, self._next_tokens.copy(), active
+            )
+            nxt = np.asarray(nxt)
+            now = self.clock()
+            for slot, info in enumerate(self._slots):
+                if not active[slot] or info is None:
+                    continue
+                tok = int(nxt[slot])
+                info.tokens.append(tok)
+                info.times.append(now)
+                n_emitted += 1
+                if info.finished:
+                    self._evict(slot, info)
+                    finished.append(info)
+                else:
+                    self._next_tokens[slot] = tok
+        return finished, n_emitted
+
+    def clear(self) -> List[DecodeSlot]:
+        """Pool death: drop slots AND return every leased block."""
+        infos = super().clear()
+        self._free_blocks = list(range(1, self.n_blocks + 1))
+        for info in infos:
+            info.blocks = []
+        return infos
+
+    def block_usage(self) -> Optional[Tuple[int, int]]:
+        if not self.paged_kv:
+            return None
+        return (self.n_blocks - len(self._free_blocks), self.n_blocks)
+
 
 @dataclass(eq=False)  # identity equality: dataclass field == would compare
 class Request:        # numpy thetas ("truth value ambiguous" in queue.remove)
@@ -596,6 +867,14 @@ class PoisonRequestError(ServerDiedError):
     never re-enters the queue.  Subclasses :class:`ServerDiedError` so
     callers handling generic server-death failures keep working.
     """
+
+
+class PromptTooLongError(ValueError):
+    """A generation request can never fit its serving pool: the prompt plus
+    generation budget exceeds ``cache_len`` (slab) or the pool's total KV
+    blocks (paged).  Raised at admission/submission as a typed per-request
+    failure — the alternative is silent cache wraparound corrupting the
+    oldest positions, which is never what the client meant."""
 
 
 class RequestCancelled(RuntimeError):

@@ -11,7 +11,10 @@ in-flight batch at token boundaries — generation lengths spanning two
 orders of magnitude stream through without short requests queueing behind
 long ones, the LM analogue of the paper's MLDA level heterogeneity.
 ``--mode generation`` runs the old request-per-generation baseline for
-comparison; both modes emit bit-identical greedy tokens.
+comparison; ``--kv paged`` swaps the slab pools for the block-table KV
+pool (chunked prefill through the pool, block-granular admission);
+``--mode speculative`` decodes through the layer-sliced self-draft.
+Every mode emits bit-identical greedy tokens.
 """
 from __future__ import annotations
 
@@ -33,11 +36,32 @@ def main() -> None:
         help="model variant(s); repeat for a heterogeneous pool",
     )
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--mode", choices=["continuous", "generation"], default="continuous")
+    ap.add_argument(
+        "--mode",
+        choices=["continuous", "generation", "paged", "speculative"],
+        default="continuous",
+    )
+    ap.add_argument(
+        "--kv",
+        choices=["slab", "paged"],
+        default="slab",
+        help="decode-pool KV layout; --kv paged upgrades --mode continuous "
+        "to the block-table pool",
+    )
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--cache-len", type=int, default=96)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument(
+        "--blocks",
+        type=int,
+        default=None,
+        help="usable KV blocks in the paged pool (default: fully provision "
+        "--slots worst-case sequences)",
+    )
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--spec-k", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -47,13 +71,20 @@ def main() -> None:
         n: (ARCHS[n].reduced() if args.reduced else ARCHS[n]) for n in names
     }
 
+    if args.mode == "continuous" and args.kv == "paged":
+        args.mode = "paged"  # same normalization the engine applies
     rng = np.random.default_rng(args.seed)
     engine = ServingEngine(
         variants,
         mode=args.mode,
+        kv=args.kv,
         n_replicas=args.replicas,
         n_slots=args.slots,
         cache_len=args.cache_len,
+        block_size=args.block_size,
+        n_blocks=args.blocks,
+        prefill_chunk=args.prefill_chunk,
+        spec_k=args.spec_k,
     )
     with engine:
         # Warm the executables so the measured window is steady-state serving.
@@ -87,6 +118,13 @@ def main() -> None:
         )
         for name, occ in m.get("slot_occupancy", {}).items():
             print(f"[serve:{args.mode}]   {name}: mean slot occupancy {occ:.2f}")
+        for name, occ in m.get("block_occupancy", {}).items():
+            print(f"[serve:{args.mode}]   {name}: mean block occupancy {occ:.2f}")
+        for tag, sp in m.get("spec_accept", {}).items():
+            print(
+                f"[serve:{args.mode}]   {tag}: spec accept rate {sp['rate']:.2f} "
+                f"({sp['accepted']}/{sp['drafted']} over {sp['rounds']} rounds)"
+            )
         for row in engine.stats_table():
             print(
                 f"[serve:{args.mode}]   {row['tag']}: {row['n_done']} done, "

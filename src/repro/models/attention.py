@@ -129,6 +129,135 @@ def init_kv_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype) -> KVCache:
     )
 
 
+class PagedKVCache(NamedTuple):
+    """Shared block-pool KV cache for paged decoding.
+
+    ``k``/``v``: (L, n_block_rows, block_size, Hkv, hd).  Row 0 is a
+    reserved scratch block: inactive slots' appends are routed there so a
+    stale slot can never clobber blocks owned by live sequences.  Slots
+    map logical positions to pool rows through per-slot block tables held
+    alongside this cache in ``lm.PagedDecodeState``.
+    """
+
+    k: jax.Array
+    v: jax.Array
+
+
+def init_paged_kv_cache(
+    cfg: ArchConfig, n_block_rows: int, block_size: int, dtype
+) -> PagedKVCache:
+    shape = (cfg.n_layers, n_block_rows, block_size, cfg.n_kv_heads, cfg.hd)
+    return PagedKVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def decode_qkv(
+    params: Params,
+    x: jax.Array,  # (B, 1, d) — the already-normed residual stream
+    pos: jax.Array,  # scalar int32 current position
+    cfg: ArchConfig,
+):
+    """Project + RoPE one decode position -> (q (B,H,1,hd), k/v (B,Hkv,1,hd)).
+
+    The write-side half of :func:`attention_decode`, split out so the
+    paged path can scatter ``k_new``/``v_new`` into a *shared* block pool
+    (a batched ``.at[].set`` outside any vmap) before the per-slot read."""
+    q, k_new, v_new = _project_qkv(params, x, cfg)
+    if cfg.rope_theta > 0:
+        pos_arr = jnp.full((1,), pos, jnp.int32)
+        q = apply_rope(q, pos_arr, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos_arr, cfg.rope_theta)
+    return q, k_new, v_new
+
+
+def chunk_qkv(
+    params: Params,
+    x: jax.Array,  # (B, C, d) — the already-normed residual stream
+    positions: jax.Array,  # (C,) int32 logical positions of the chunk
+    cfg: ArchConfig,
+):
+    """Project + RoPE a chunk of C positions -> (q (B,H,C,hd), k/v (B,Hkv,C,hd)).
+
+    The multi-position analogue of :func:`decode_qkv`: projections and
+    RoPE are per-position elementwise, so position ``i``'s ``k_new``/
+    ``v_new`` here is the same value the per-token path would write — one
+    batched pool scatter replaces C sequential ones."""
+    q, k_new, v_new = _project_qkv(params, x, cfg)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    return q, k_new, v_new
+
+
+def attend_view(
+    params: Params,
+    q: jax.Array,  # (B, H, 1, hd) — RoPE'd query from decode_qkv
+    view_k: jax.Array,  # (B, Hkv, W, hd) identity-mapped cache view
+    view_v: jax.Array,
+    pos: jax.Array,  # scalar int32 current position (already written at W=pos)
+    cfg: ArchConfig,
+) -> jax.Array:
+    """Attention read against an identity-mapped cache view -> (B, 1, d).
+
+    The view's physical index IS the logical position (paged gathers
+    reconstruct exactly this layout), so validity is simply ``j <= pos``
+    — elementwise the same mask :func:`attention_decode` derives from its
+    ``pos_buf`` when the cache never wraps, which is what keeps paged
+    tokens bit-identical to the slab path.
+    """
+    b = q.shape[0]
+    hd = cfg.hd
+    w = view_k.shape[2]
+    group = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, cfg.n_kv_heads, group, hd)
+    scores = jnp.einsum(
+        "bkgd,bksd->bkgs", qg, view_k, preferred_element_type=jnp.float32
+    ) * (hd**-0.5)
+    j = jnp.arange(w)
+    valid = j <= pos
+    if cfg.sliding_window is not None:
+        valid = valid & (j > pos - cfg.sliding_window)
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p.astype(view_v.dtype), view_v)
+    o = o.reshape(b, 1, cfg.n_heads * hd)
+    return jnp.einsum("bse,ed->bsd", o, params["wo"])
+
+
+def attend_view_chunk(
+    params: Params,
+    q: jax.Array,  # (B, H, C, hd) — RoPE'd queries from chunk_qkv
+    view_k: jax.Array,  # (B, Hkv, W, hd) identity-mapped cache view
+    view_v: jax.Array,
+    positions: jax.Array,  # (C,) int32 — query i sits at positions[i]
+    cfg: ArchConfig,
+) -> jax.Array:
+    """Multi-query attention over an identity-mapped view -> (B, C, d).
+
+    Query ``i`` applies exactly :func:`attend_view`'s validity rule at
+    ``positions[i]`` (``j <= pos`` plus the window term), so a chunked
+    prefill sees the same causal structure the per-token path does — the
+    chunk's own keys are already in the view and later-chunk positions
+    are masked off.
+    """
+    b, _, c, _ = q.shape
+    hd = cfg.hd
+    w = view_k.shape[2]
+    group = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, cfg.n_kv_heads, group, c, hd)
+    scores = jnp.einsum(
+        "bkgqd,bksd->bkgqs", qg, view_k, preferred_element_type=jnp.float32
+    ) * (hd**-0.5)
+    j = jnp.arange(w)
+    valid = j[None, :] <= positions[:, None]  # (C, W)
+    if cfg.sliding_window is not None:
+        valid = valid & (j[None, :] > positions[:, None] - cfg.sliding_window)
+    scores = jnp.where(valid[None, None, None, :, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p.astype(view_v.dtype), view_v)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, c, cfg.n_heads * hd)
+    return jnp.einsum("bse,ed->bsd", o, params["wo"])
+
+
 def attention_decode(
     params: Params,
     x: jax.Array,  # (B, 1, d)
@@ -142,11 +271,7 @@ def attention_decode(
     b = x.shape[0]
     hd = cfg.hd
     w = layer_k.shape[2]
-    q, k_new, v_new = _project_qkv(params, x, cfg)  # (B,H,1,hd), (B,Hkv,1,hd)
-    if cfg.rope_theta > 0:
-        pos_arr = jnp.full((1,), pos, jnp.int32)
-        q = apply_rope(q, pos_arr, cfg.rope_theta)
-        k_new = apply_rope(k_new, pos_arr, cfg.rope_theta)
+    q, k_new, v_new = decode_qkv(params, x, pos, cfg)
 
     slot = jnp.mod(pos, w)
     layer_k = jax.lax.dynamic_update_slice_in_dim(layer_k, k_new, slot, axis=2)

@@ -20,10 +20,16 @@ from repro.configs.base import ArchConfig
 
 from .attention import (
     KVCache,
+    PagedKVCache,
+    attend_view,
+    attend_view_chunk,
     attention_decode,
     attention_train,
+    chunk_qkv,
+    decode_qkv,
     init_attention,
     init_kv_cache,
+    init_paged_kv_cache,
 )
 from .layers import (
     Params,
@@ -458,3 +464,280 @@ def slot_evict(
     overwrites the slot), so pools may skip eviction entirely.
     """
     return slot_insert(pool_state, init_decode_state(cfg, 1, cache_len), slot)
+
+
+# ---------------------------------------------------------------------------
+# Paged decoding: shared KV block pool + per-slot block tables
+# ---------------------------------------------------------------------------
+class PagedDecodeState(NamedTuple):
+    """Pool-wide decode state for paged continuous batching.
+
+    ``kv``: shared :class:`PagedKVCache` block pool (None for ssm).
+    ``tables``: (n_slots, max_blocks) int32 pool-row indices per slot;
+    unallocated entries point at the scratch row 0 and are only ever read
+    at positions masked out by ``pos``.
+    ``ssm_h``/``ssm_conv``: slot-stacked (n_slots, L, 1, ...) recurrent
+    state (None for attention families) — SSM state is O(1) per sequence,
+    so "paged" mode for ssm is the slab representation plus chunked
+    prefill; it allocates zero blocks.
+    ``pos``: (n_slots,) int32 per-slot position.
+    """
+
+    kv: Optional[PagedKVCache]
+    tables: Optional[jax.Array]
+    ssm_h: Optional[jax.Array]
+    ssm_conv: Optional[jax.Array]
+    pos: jax.Array
+
+
+def check_paged_support(cfg: ArchConfig, cache_len: int) -> None:
+    """Raise if ``cfg`` can't serve through the paged path bit-identically.
+
+    The paged view is a never-wrapping identity map of logical positions,
+    so the slab reference must also never wrap: a sliding window shorter
+    than ``cache_len`` would make the slab cache a ring buffer whose
+    physical layout (and reduction order) diverges.
+    """
+    if cfg.family not in ("dense", "moe", "vlm", "ssm"):
+        raise ValueError(
+            f"paged decoding unsupported for family {cfg.family!r} "
+            "(hybrid/encdec caches are not block-structured)"
+        )
+    if (
+        cfg.family != "ssm"
+        and cfg.sliding_window is not None
+        and cfg.sliding_window < cache_len
+    ):
+        raise ValueError(
+            f"paged decoding requires sliding_window >= cache_len "
+            f"({cfg.sliding_window} < {cache_len}): the slab reference "
+            "wraps and bit-identity no longer holds"
+        )
+
+
+def init_paged_state(
+    cfg: ArchConfig,
+    n_slots: int,
+    n_block_rows: int,
+    block_size: int,
+    max_blocks: int,
+    cache_len: int,
+) -> PagedDecodeState:
+    check_paged_support(cfg, cache_len)
+    pos = jnp.zeros((n_slots,), jnp.int32)
+    if cfg.family == "ssm":
+        one = init_decode_state(cfg, 1, cache_len)
+        rep = lambda x: jnp.repeat(x[None], n_slots, axis=0)
+        return PagedDecodeState(
+            kv=None,
+            tables=None,
+            ssm_h=rep(one.ssm_h),
+            ssm_conv=rep(one.ssm_conv),
+            pos=pos,
+        )
+    kv = init_paged_kv_cache(
+        cfg, n_block_rows, block_size, dtype_of(cfg.compute_dtype)
+    )
+    tables = jnp.zeros((n_slots, max_blocks), jnp.int32)
+    return PagedDecodeState(kv=kv, tables=tables, ssm_h=None, ssm_conv=None, pos=pos)
+
+
+def _lm_head_token(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """(1, 1, d) final residual -> greedy next-token id (scalar int32)."""
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(x, params["embed"])
+    else:
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x.astype(jnp.float32), params["unembed"].astype(jnp.float32)
+        )
+    return jnp.argmax(logits[0, -1]).astype(jnp.int32)
+
+
+def paged_decode_step(
+    params: Params,
+    cfg: ArchConfig,
+    state: PagedDecodeState,
+    tokens: jax.Array,  # (n_slots,) feed token per slot
+    active: jax.Array,  # (n_slots,) bool — False slots neither write nor advance
+    cache_len: int,
+) -> Tuple[PagedDecodeState, jax.Array]:
+    """One fused decode step for every active slot -> (state, next_tokens).
+
+    Structured as vmaps of the *per-slot* B=1 computation (the same shape
+    the slab pool's ``vmap(step_one)`` lowers to) with only the KV
+    scatter/gather hoisted out as batched pool ops, so emitted tokens stay
+    bit-identical to the slab path.  Inactive slots' appends are routed to
+    the scratch row 0 and their outputs discarded.
+    """
+    n = tokens.shape[0]
+    pos = state.pos
+    new_pos = pos + active.astype(jnp.int32)
+
+    if cfg.family == "ssm":
+
+        def one(h, conv, p, tok):
+            st = DecodeState(kv=None, ssm_h=h, ssm_conv=conv, pos=p)
+            logits, st = decode_step(params, cfg, st, tok.reshape(1, 1))
+            return st.ssm_h, st.ssm_conv, jnp.argmax(logits[0, -1]).astype(jnp.int32)
+
+        new_h, new_conv, toks = jax.vmap(one)(
+            state.ssm_h, state.ssm_conv, pos, tokens
+        )
+
+        # Inactive slots (free OR mid-prefill) must keep their state: the
+        # recurrent update has no scratch row to absorb the dummy feed.
+        def keep(new, old):
+            mask = active.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(mask, new, old)
+
+        return (
+            state._replace(
+                ssm_h=keep(new_h, state.ssm_h),
+                ssm_conv=keep(new_conv, state.ssm_conv),
+                pos=new_pos,
+            ),
+            toks,
+        )
+
+    kv = state.kv
+    bs = kv.k.shape[2]
+    w_full = state.tables.shape[1] * bs
+    # Route inactive slots' writes to the scratch row; active rows are >= 1.
+    blk = jnp.where(active, state.tables[jnp.arange(n), pos // bs], 0)
+    off = pos % bs
+    x = params["embed"][tokens.reshape(n, 1, 1)].astype(dtype_of(cfg.compute_dtype))
+
+    def body(x, xs):
+        layer_params, kp, vp = xs
+
+        def pre(x1, p1):
+            h = rmsnorm(x1, layer_params["ln1"], cfg.norm_eps)
+            return decode_qkv(layer_params["attn"], h, p1, cfg)
+
+        q, k_new, v_new = jax.vmap(pre)(x, pos)  # q (n,1,H,1,hd)
+        kp = kp.at[blk, off].set(k_new[:, 0, :, 0, :])
+        vp = vp.at[blk, off].set(v_new[:, 0, :, 0, :])
+        # Gather each slot's table rows back into an identity-position view
+        # (n, 1, Hkv, cache_len, hd) — same shape the slab cache presents.
+        vk = kp[state.tables].reshape(n, w_full, cfg.n_kv_heads, cfg.hd)
+        vv = vp[state.tables].reshape(n, w_full, cfg.n_kv_heads, cfg.hd)
+        vk = vk[:, :cache_len].transpose(0, 2, 1, 3)[:, None]
+        vv = vv[:, :cache_len].transpose(0, 2, 1, 3)[:, None]
+
+        def post(x1, q1, vk1, vv1, p1):
+            o = attend_view(layer_params["attn"], q1, vk1, vv1, p1, cfg)
+            x1 = x1 + o
+            h = rmsnorm(x1, layer_params["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                return x1 + moe_ffn(layer_params["moe"], h, cfg.moe)
+            return x1 + mlp(layer_params["mlp"], h, cfg.mlp)
+
+        x = jax.vmap(post)(x, q, vk, vv, pos)
+        return x, (kp, vp)
+
+    x, (new_k, new_v) = jax.lax.scan(body, x, (params["blocks"], kv.k, kv.v))
+    toks = jax.vmap(lambda x1: _lm_head_token(params, cfg, x1))(x)
+    return state._replace(kv=PagedKVCache(k=new_k, v=new_v), pos=new_pos), toks
+
+
+def paged_prefill_chunk(
+    params: Params,
+    cfg: ArchConfig,
+    state: PagedDecodeState,
+    slot: jax.Array,  # scalar int32
+    tokens: jax.Array,  # (C,) chunk of the prompt (or prompt + fed-back token)
+    start_pos: jax.Array,  # scalar int32 position of tokens[0]
+    cache_len: int,
+) -> Tuple[PagedDecodeState, jax.Array]:
+    """Feed one slot a chunk of C positions -> (state, last next-token id).
+
+    For KV families the whole chunk is one batched pass per layer: all C
+    positions are projected/RoPE'd at once (bit-identical per position to
+    the per-token path, so the *written KV* is exactly what sequential
+    prefill writes), scattered into the pool with one batched ``.at[]``,
+    and attended with :func:`attend_view_chunk`'s per-query causal mask.
+    This is what makes chunked prefill through the pool cheap enough to
+    interleave with decode — C sequential layer-scans collapse to one.
+    SSM families keep the B=1 scan of :func:`decode_step` (the recurrence
+    is inherently sequential).
+    """
+    if cfg.family == "ssm":
+        h = jax.lax.dynamic_index_in_dim(state.ssm_h, slot, 0, keepdims=False)
+        conv = jax.lax.dynamic_index_in_dim(state.ssm_conv, slot, 0, keepdims=False)
+        st = DecodeState(kv=None, ssm_h=h, ssm_conv=conv, pos=start_pos)
+
+        def body(st, tok):
+            logits, st = decode_step(params, cfg, st, tok.reshape(1, 1))
+            return st, jnp.argmax(logits[0, -1]).astype(jnp.int32)
+
+        st, toks = jax.lax.scan(body, st, tokens)
+        return (
+            state._replace(
+                ssm_h=jax.lax.dynamic_update_index_in_dim(
+                    state.ssm_h, st.ssm_h, slot, 0
+                ),
+                ssm_conv=jax.lax.dynamic_update_index_in_dim(
+                    state.ssm_conv, st.ssm_conv, slot, 0
+                ),
+                pos=state.pos.at[slot].set(st.pos),
+            ),
+            toks[-1],
+        )
+
+    kv = state.kv
+    bs = kv.k.shape[2]
+    w_full = state.tables.shape[1] * bs
+    row = jax.lax.dynamic_index_in_dim(state.tables, slot, 0, keepdims=False)
+    cdt = dtype_of(cfg.compute_dtype)
+    c = tokens.shape[0]
+    pos_vec = start_pos + jnp.arange(c, dtype=jnp.int32)
+    blks = row[pos_vec // bs]
+    offs = pos_vec % bs
+    x = params["embed"][tokens[None, :]].astype(cdt)  # (1, C, d)
+
+    def layer_body(x, xs):
+        layer_params, kp, vp = xs
+        h = rmsnorm(x, layer_params["ln1"], cfg.norm_eps)
+        q, k_new, v_new = chunk_qkv(layer_params["attn"], h, pos_vec, cfg)
+        # (1, Hkv, C, hd) -> (C, Hkv, hd): one scatter for the whole chunk.
+        kp = kp.at[blks, offs].set(k_new[0].transpose(1, 0, 2))
+        vp = vp.at[blks, offs].set(v_new[0].transpose(1, 0, 2))
+        vk = kp[row].reshape(w_full, cfg.n_kv_heads, cfg.hd)
+        vv_ = vp[row].reshape(w_full, cfg.n_kv_heads, cfg.hd)
+        vk = vk[:cache_len].transpose(1, 0, 2)[None]
+        vv_ = vv_[:cache_len].transpose(1, 0, 2)[None]
+        o = attend_view_chunk(layer_params["attn"], q, vk, vv_, pos_vec, cfg)
+        x = x + o
+        h = rmsnorm(x, layer_params["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            return x + moe_ffn(layer_params["moe"], h, cfg.moe), (kp, vp)
+        return x + mlp(layer_params["mlp"], h, cfg.mlp), (kp, vp)
+
+    x, (kk, vv) = jax.lax.scan(layer_body, x, (params["blocks"], kv.k, kv.v))
+    # Head only on the last position — earlier chunk logits are never used.
+    tok = _lm_head_token(params, cfg, x[:, -1:, :])
+    return (
+        state._replace(
+            kv=PagedKVCache(k=kk, v=vv),
+            pos=state.pos.at[slot].set(start_pos + c),
+        ),
+        tok,
+    )
+
+
+def paged_reset_slot(
+    state: PagedDecodeState, slot: jax.Array, row: jax.Array
+) -> PagedDecodeState:
+    """Point ``slot`` at block-table ``row`` and rewind it to position 0.
+
+    KV blocks themselves are not cleared — stale contents are masked by
+    the ``j <= pos`` validity rule until overwritten in order.
+    """
+    kw = {"pos": state.pos.at[slot].set(0)}
+    if state.tables is not None:
+        kw["tables"] = state.tables.at[slot].set(row)
+    if state.ssm_h is not None:
+        kw["ssm_h"] = state.ssm_h.at[slot].set(0)
+        kw["ssm_conv"] = state.ssm_conv.at[slot].set(0)
+    return state._replace(**kw)

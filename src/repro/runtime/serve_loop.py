@@ -15,8 +15,10 @@ Two layers live here:
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
+from functools import partial
 from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 import jax
@@ -28,11 +30,23 @@ from repro.balancer import (
     DecodePool,
     DecodeResult,
     LoadBalancer,
+    PagedDecodePool,
+    PromptTooLongError,
     Server,
 )
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import ModelBundle, abstract_decode_state, build_model, input_specs
-from repro.models.lm import pool_decode_state, slot_insert
+from repro.models.lm import (
+    check_paged_support,
+    decode_step as lm_decode_step,
+    init_paged_state,
+    paged_decode_step,
+    paged_prefill_chunk,
+    paged_reset_slot,
+    pool_decode_state,
+    prefill_state as lm_prefill_state,
+    slot_insert,
+)
 
 from .sharding import (
     ShardingPolicy,
@@ -159,6 +173,224 @@ def make_decode_pool(
     )
 
 
+def make_paged_decode_pool(
+    bundle: ModelBundle,
+    params,
+    *,
+    n_slots: int,
+    cache_len: int,
+    block_size: int = 16,
+    n_blocks: Optional[int] = None,
+    prefill_chunk: int = 16,
+    name: str,
+    tag: str,
+) -> PagedDecodePool:
+    """A :class:`PagedDecodePool` over the block-table decode path.
+
+    The device state is one shared ``(L, n_blocks+1, block_size, Hkv,
+    hd)`` KV pool (row 0 = scratch) plus per-slot block tables; requests
+    carry raw ``(prompt, n_new, eos)`` thetas and are prefilled *through
+    the pool* ``prefill_chunk`` positions per token boundary.  ``n_blocks``
+    is the usable block count; None fully provisions ``n_slots`` worst-case
+    sequences (slot-granular admission, block sharing still pays off for
+    mixed lengths via early EOS frees).  For O(1)-state families (ssm)
+    blocks degenerate to 0 and only chunked prefill remains.
+
+    The chunk closure retraces per distinct chunk length (bounded:
+    ``prefill_chunk`` full chunks plus one remainder length per distinct
+    prompt-length residue); the fused step and reset compile once.
+    """
+    cfg = bundle.cfg
+    check_paged_support(cfg, cache_len)
+    max_blocks = -(-cache_len // block_size)  # ceil
+    if cfg.family == "ssm":
+        n_blocks = 0
+    elif n_blocks is None:
+        n_blocks = n_slots * max_blocks
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def step_j(state, tokens, active):
+        return paged_decode_step(params, cfg, state, tokens, active, cache_len)
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def chunk_j(state, slot, chunk, start_pos):
+        return paged_prefill_chunk(
+            params, cfg, state, slot, chunk, start_pos, cache_len
+        )
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def reset_j(state, slot, row):
+        return paged_reset_slot(state, slot, row)
+
+    def step_fn(state, tokens, active):
+        state, nxt = step_j(
+            state, jnp.asarray(tokens, jnp.int32), jnp.asarray(active, bool)
+        )
+        return state, np.asarray(nxt)
+
+    def chunk_fn(state, slot, chunk, start_pos):
+        state, tok = chunk_j(
+            state,
+            jnp.int32(slot),
+            jnp.asarray(chunk, jnp.int32),
+            jnp.int32(start_pos),
+        )
+        return state, int(tok)
+
+    def reset_fn(state, slot, row):
+        return reset_j(state, jnp.int32(slot), jnp.asarray(row, jnp.int32))
+
+    return PagedDecodePool(
+        step_fn,
+        chunk_fn,
+        reset_fn,
+        init_state_fn=lambda: init_paged_state(
+            cfg, n_slots, n_blocks + 1, block_size, max_blocks, cache_len
+        ),
+        n_slots=n_slots,
+        n_blocks=n_blocks,
+        block_size=block_size,
+        max_blocks_per_slot=max_blocks,
+        max_positions=cache_len,
+        prefill_chunk=prefill_chunk,
+        name=name,
+        capacity_tags=[tag],
+    )
+
+
+def speculative_supported(cfg: ArchConfig, cache_len: int) -> bool:
+    """Self-speculative decoding needs a KV family (the draft shares the
+    target's cache layout and the verify step rewinds ``pos``, relying on
+    position-masked stale entries) and a never-wrapping cache."""
+    return cfg.family in ("dense", "moe", "vlm") and (
+        cfg.sliding_window is None or cfg.sliding_window >= cache_len
+    )
+
+
+def make_speculative_fn(
+    bundle: ModelBundle,
+    params,
+    cache_len: int,
+    *,
+    spec_k: int = 4,
+    draft_layers: Optional[int] = None,
+    clock: Callable[[], float] = time.monotonic,
+    on_round: Optional[Callable[[int, int], None]] = None,
+) -> Callable[[Tuple], DecodeResult]:
+    """Greedy self-speculative handler for a ``spec:<variant>`` server.
+
+    The draft is the target's own bottom ``draft_layers`` transformer
+    blocks (default ``n_layers // 2``) — the parameter dict shares every
+    leaf with the target except the ``blocks`` stack is sliced, so no
+    extra weights exist.  Per round the draft proposes ``spec_k`` tokens
+    sequentially; the target verifies them in ONE fused scan over the
+    ``spec_k + 1`` stacked feeds and the accepted prefix is emitted.
+    Every emitted token is the argmax the plain greedy path would have
+    produced (the verify outputs ARE plain greedy logits at their
+    positions), so tokens are bit-identical to ``gen:<v>``/continuous.
+
+    State invariants across rounds: the target rewinds ``pos`` to the
+    last verified position (stale KV beyond it is masked by the ``pos``
+    validity rule, never cleared); the draft keeps ``draft_ok`` — how many
+    of its consumed feeds were *true* tokens — and catches up from there,
+    which guarantees at least one catch-up feed per round (the producer
+    of draft token D0) even when a whole round was accepted.
+
+    ``on_round(accepted, drafted)`` feeds the accept-rate telemetry.
+    """
+    cfg = bundle.cfg
+    if not speculative_supported(cfg, cache_len):
+        raise ValueError(
+            f"speculative decoding unsupported for family {cfg.family!r} "
+            f"(or sliding_window < cache_len)"
+        )
+    if spec_k < 1:
+        raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+    d_layers = draft_layers if draft_layers is not None else max(1, cfg.n_layers // 2)
+    if not 1 <= d_layers <= cfg.n_layers:
+        raise ValueError(f"draft_layers {d_layers} out of range")
+    d_cfg = dataclasses.replace(cfg, n_layers=d_layers)
+    d_params = dict(params)
+    d_params["blocks"] = jax.tree.map(lambda x: x[:d_layers], params["blocks"])
+
+    pf = jax.jit(bundle.prefill_state, static_argnums=(2,))
+    d_pf = jax.jit(
+        lambda p, t, s: lm_prefill_state(p, d_cfg, t, s), static_argnums=(2,)
+    )
+    d_step = jax.jit(lambda p, st, t: lm_decode_step(p, d_cfg, st, t))
+
+    @jax.jit
+    def verify(state, feeds):  # feeds (k+1,): last token + k drafts
+        def body(st, tok):
+            logits, st = bundle.decode_step(params, st, tok.reshape(1, 1))
+            return st, jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
+
+        return jax.lax.scan(body, state, feeds)
+
+    def generate(theta) -> DecodeResult:
+        prompt, n_new, eos = theta
+        prompt = np.asarray(prompt, dtype=np.int64).reshape(-1)
+        s_len = len(prompt)
+        n_new = int(n_new)
+        logits, st = pf(params, jnp.asarray(prompt[None], jnp.int32), cache_len)
+        tokens = [int(jnp.argmax(logits[0, -1]))]
+        times = [clock()]
+        _, sd = d_pf(d_params, jnp.asarray(prompt[None], jnp.int32), cache_len)
+        draft_ok = s_len  # leading draft feeds that were true tokens
+        while len(tokens) < n_new and (eos is None or tokens[-1] != eos):
+            t_len = len(tokens)
+            # Clamp so the verify scan never writes past the cache or the
+            # budget; k may hit 0 (degenerate round = one plain step).
+            k = max(
+                0, min(spec_k, cache_len - (s_len + t_len), n_new - t_len - 1)
+            )
+            # Draft catch-up: replay the true feeds it hasn't consumed —
+            # at least one (seq[s+t-1], whose output is draft token D0).
+            seq = prompt.tolist() + tokens
+            sd = sd._replace(pos=jnp.int32(draft_ok))
+            d_logits = None
+            for f in seq[draft_ok : s_len + t_len]:
+                d_logits, sd = d_step(
+                    d_params, sd, jnp.full((1, 1), int(f), jnp.int32)
+                )
+            drafts: List[int] = []
+            while len(drafts) < k:
+                drafts.append(int(jnp.argmax(d_logits[0, -1])))
+                if len(drafts) < k:
+                    d_logits, sd = d_step(
+                        d_params, sd, jnp.full((1, 1), drafts[-1], jnp.int32)
+                    )
+            feeds = jnp.asarray([tokens[-1]] + drafts, jnp.int32)
+            st, greedy = verify(st, feeds)
+            greedy = np.asarray(greedy)
+            accepted = 0
+            while accepted < k and drafts[accepted] == int(greedy[accepted]):
+                accepted += 1
+            if on_round is not None and k > 0:
+                on_round(accepted, k)
+            now = clock()
+            stop = False
+            for g in greedy[: accepted + 1]:
+                tokens.append(int(g))
+                times.append(now)
+                if len(tokens) >= n_new or (eos is not None and int(g) == eos):
+                    stop = True
+                    break
+            if stop:
+                break
+            # Rewind past the first wrong feed: valid feeds were the last
+            # emitted token + the accepted drafts.
+            st = st._replace(pos=jnp.int32(s_len + t_len + accepted))
+            # The draft consumed drafts[:-1]; its true prefix grows by the
+            # accepted ones it actually ate.
+            draft_ok = s_len + t_len + min(accepted, max(k - 1, 0))
+        return DecodeResult(
+            tokens=np.asarray(tokens, dtype=np.int64), token_times=times
+        )
+
+    return generate
+
+
 def make_generate_fn(
     bundle: ModelBundle,
     params,
@@ -206,6 +438,10 @@ class Generation:
     once (the open-loop load model).  ``result()`` joins the chain.
     """
 
+    # Single-dispatch modes and the tag family each submits to; continuous
+    # (slab) is the one two-stage mode (prefill server -> decode pool).
+    _SINGLE_TAGS = {"generation": "gen", "paged": "prefill", "speculative": "spec"}
+
     def __init__(self, lb: LoadBalancer, variant: str, theta, mode: str) -> None:
         self._lb = lb
         self.variant = variant
@@ -214,10 +450,9 @@ class Generation:
         self._result: Optional[DecodeResult] = None
         self._error: Optional[BaseException] = None
         self._done = threading.Event()
-        if mode == "generation":
-            self._lb.submit_async(theta, tag=f"gen:{variant}").add_done_callback(
-                self._on_final
-            )
+        if mode in self._SINGLE_TAGS:
+            tag = f"{self._SINGLE_TAGS[mode]}:{variant}"
+            self._lb.submit_async(theta, tag=tag).add_done_callback(self._on_final)
         else:
             self._lb.submit_async(theta, tag=f"prefill:{variant}").add_done_callback(
                 self._on_prefill
@@ -273,15 +508,25 @@ class ServingEngine:
         variants: Mapping[str, ArchConfig],
         *,
         mode: str = "continuous",
+        kv: str = "slab",
         n_replicas: int = 1,
         n_slots: int = 4,
         cache_len: int = 96,
+        block_size: int = 16,
+        n_blocks: Optional[int] = None,
+        prefill_chunk: int = 16,
+        spec_k: int = 4,
+        spec_draft_layers: Optional[int] = None,
         policy: str = "cost_aware",
         seed: int = 0,
         exact_telemetry: bool = False,
     ) -> None:
-        if mode not in ("continuous", "generation"):
+        if mode not in ("continuous", "generation", "paged", "speculative"):
             raise ValueError(f"unknown serving mode '{mode}'")
+        if kv not in ("slab", "paged"):
+            raise ValueError(f"unknown kv layout '{kv}'")
+        if mode == "continuous" and kv == "paged":
+            mode = "paged"  # paged IS continuous batching over the block pool
         self.mode = mode
         self.cache_len = cache_len
         self.variants: Dict[str, ArchConfig] = dict(variants)
@@ -312,6 +557,44 @@ class ServingEngine:
                             tag=f"decode:{vname}",
                         )
                     )
+                elif mode == "paged":
+                    # One pool per replica: prefill runs THROUGH it in
+                    # chunks, so the prefill tag routes straight here.
+                    servers.append(
+                        make_paged_decode_pool(
+                            bundle,
+                            params,
+                            n_slots=n_slots,
+                            cache_len=cache_len,
+                            block_size=block_size,
+                            n_blocks=n_blocks,
+                            prefill_chunk=prefill_chunk,
+                            name=f"paged:{vname}#{r}",
+                            tag=f"prefill:{vname}",
+                        )
+                    )
+                elif mode == "speculative":
+                    if speculative_supported(cfg, cache_len):
+                        fn = make_speculative_fn(
+                            bundle,
+                            params,
+                            cache_len,
+                            spec_k=spec_k,
+                            draft_layers=spec_draft_layers,
+                            on_round=partial(self._record_spec, f"spec:{vname}"),
+                        )
+                    else:
+                        # Non-KV families (ssm) have no cheap layer-sliced
+                        # draft: serve plain greedy under the spec tag so
+                        # a mixed zoo still takes a uniform workload.
+                        fn = make_generate_fn(bundle, params, cache_len)
+                    servers.append(
+                        Server(
+                            fn,
+                            name=f"spec:{vname}#{r}",
+                            capacity_tags=[f"spec:{vname}"],
+                        )
+                    )
                 else:
                     servers.append(
                         Server(
@@ -324,14 +607,29 @@ class ServingEngine:
             servers, policy=policy, exact_telemetry=exact_telemetry
         )
 
+    def _record_spec(self, tag: str, accepted: int, drafted: int) -> None:
+        self.lb.telemetry.record_spec(tag, accepted, drafted)
+
     # -- client API ----------------------------------------------------------
     def submit(
         self, variant: str, prompt, n_new: int, *, eos: Optional[int] = None
     ) -> Generation:
-        """Submit one generation (non-blocking); join via ``.result()``."""
+        """Submit one generation (non-blocking); join via ``.result()``.
+
+        Raises :class:`PromptTooLongError` when the prompt plus budget can
+        never fit ``cache_len`` — the cache would silently wrap mid-
+        generation otherwise, corrupting the oldest positions.
+        """
         if variant not in self.variants:
             raise KeyError(f"unknown variant '{variant}'")
-        theta = (np.asarray(prompt, dtype=np.int64), int(n_new), eos)
+        prompt = np.asarray(prompt, dtype=np.int64)
+        need = int(prompt.size) + int(n_new) - 1
+        if prompt.size < 1 or need > self.cache_len:
+            raise PromptTooLongError(
+                f"prompt ({prompt.size}) + n_new ({n_new}) needs {need} "
+                f"cache positions; engine cache_len is {self.cache_len}"
+            )
+        theta = (prompt, int(n_new), eos)
         return Generation(self.lb, variant, theta, self.mode)
 
     def summary(self):
@@ -380,5 +678,21 @@ def serving_metrics(
         if occ:
             out["slot_occupancy"] = {
                 name: round(row["mean"], 4) for name, row in occ.items()
+            }
+        blocks = summary.get("block_occupancy", {})
+        if blocks:
+            out["block_occupancy"] = {
+                name: round(row["mean"], 4) for name, row in blocks.items()
+            }
+        spec = summary.get("spec_accept", {})
+        if spec:
+            out["spec_accept"] = {
+                tag: {
+                    "rate": round(row["rate"], 4),
+                    "rounds": row["rounds"],
+                    "accepted": row["accepted"],
+                    "drafted": row["drafted"],
+                }
+                for tag, row in spec.items()
             }
     return out

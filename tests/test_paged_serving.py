@@ -1,0 +1,268 @@
+"""Paged KV-cache serving tests (DESIGN.md §10).
+
+Fast layers (fake chunk/step functions, no device work) cover the
+PagedDecodePool lifecycle: block-granular admission with head-of-line
+FIFO backpressure, chunked-prefill fairness on a fake clock, block-lease
+accounting across EOS/length eviction and pool death, and the typed
+never-fits rejection.  Real-model tests then pin the numerical contract
+of the whole PR — paged block-table decode, chunked prefill through the
+pool and speculative decoding all emit tokens bit-identical to the
+request-per-generation baseline — on a dense and an SSM family.
+"""
+import numpy as np
+import pytest
+
+from repro.balancer import (
+    LoadBalancer,
+    PagedDecodePool,
+    PromptTooLongError,
+)
+from repro.configs import ARCHS
+from repro.runtime.serve_loop import ServingEngine
+
+REAL_ARCHS = ["qwen2-0.5b", "mamba2-1.3b"]
+
+
+# ---------------------------------------------------------------------------
+# Fake-pool fixtures: block accounting without device work
+# ---------------------------------------------------------------------------
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+def fake_paged_pool(
+    n_slots=4,
+    *,
+    n_blocks=3,
+    block_size=4,
+    max_blocks_per_slot=2,
+    max_positions=8,
+    prefill_chunk=2,
+    clock=None,
+    **kw,
+):
+    """A PagedDecodePool whose 'model' emits last-input+1 each call.
+
+    ``chunk_fn`` returns ``chunk[-1] + 1`` (the would-be first token),
+    ``step_fn`` returns ``tokens + 1`` — so a prompt ``[10, 11]`` streams
+    ``[12, 13, 14, ...]`` and every emission is predictable.
+    """
+
+    def step_fn(state, toks, active):
+        return state + 1, np.asarray(toks) + 1
+
+    def chunk_fn(state, slot, chunk, start_pos):
+        return state + 1, int(chunk[-1]) + 1
+
+    def reset_fn(state, slot, row):
+        return state
+
+    return PagedDecodePool(
+        step_fn,
+        chunk_fn,
+        reset_fn,
+        lambda: 0,
+        n_slots,
+        n_blocks=n_blocks,
+        block_size=block_size,
+        max_blocks_per_slot=max_blocks_per_slot,
+        max_positions=max_positions,
+        prefill_chunk=prefill_chunk,
+        clock=clock or FakeClock(),
+        **kw,
+    )
+
+
+def theta(prompt, n_new, eos=None):
+    return (np.asarray(prompt, dtype=np.int64).reshape(1, -1), n_new, eos)
+
+
+def test_chunked_prefill_token_stream_and_ttft_boundary():
+    """Prefill runs through the pool in chunks; the first token is emitted
+    at the boundary the prompt completes and the fused step of that SAME
+    boundary appends the second."""
+    clock = FakeClock()
+    pool = fake_paged_pool(n_slots=1, clock=clock)
+    lb = LoadBalancer([pool])
+    # prompt len 3, chunk 2 -> boundaries: [10,11] then [12] -> tok 13
+    r = lb.submit_async(theta([10, 11, 12], 4), tag="")
+    res = lb.result(r, timeout=5)
+    assert res.tokens.tolist() == [13, 14, 15, 16]
+    # 13 (prefill completion) and 14 (fused step) share boundary 2: their
+    # clock stamps are adjacent ticks, strictly after the empty boundary 1.
+    assert res.token_times == sorted(res.token_times)
+    assert len(res.token_times) == 4
+    assert pool.block_usage() == (0, pool.n_blocks)
+    lb.shutdown()
+
+
+def test_block_backpressure_preserves_fifo_head_of_line():
+    """When the queue head does not fit in free blocks, later requests
+    that WOULD fit must wait behind it (no head-of-line skipping)."""
+    pool = fake_paged_pool(n_slots=4, n_blocks=3, block_size=4)
+    lb = LoadBalancer([pool])
+    # A: 2+2-1 = 3 positions -> 1 block, finishes at the first boundary.
+    # B: 2+5-1 = 6 positions -> 2 blocks, runs 4 boundaries longer.
+    # C: 2 blocks — must wait for BOTH of B's blocks even though A's
+    #    single freed block would admit D at an earlier boundary.
+    # D: 1 block — fits the moment A evicts, but C holds the queue head.
+    ra = lb.submit_async(theta([1, 2], 2), tag="")
+    rb = lb.submit_async(theta([1, 2], 5), tag="")
+    rc = lb.submit_async(theta([1, 2], 5), tag="")
+    rd = lb.submit_async(theta([1, 2], 2), tag="")
+    for r in (ra, rb, rc, rd):
+        lb.result(r, timeout=5)
+    admitted = [req for _, req in pool.admit_log]
+    assert admitted == [ra, rb, rc, rd], "block backpressure broke FIFO"
+    # every lease was returned
+    assert pool.block_usage() == (0, 3)
+    assert pool.n_free == pool.n_slots
+    lb.shutdown()
+
+
+def test_chunked_prefill_fifo_fairness_on_fake_clock():
+    """With one slot, the second request's entire generation — including
+    its chunked prefill — happens strictly after the first completes."""
+    clock = FakeClock()
+    pool = fake_paged_pool(n_slots=1, clock=clock, max_positions=8)
+    lb = LoadBalancer([pool])
+    ra = lb.submit_async(theta([1, 2, 3, 4], 2), tag="")
+    rb = lb.submit_async(theta([5, 6, 7, 8], 2), tag="")
+    res_a = lb.result(ra, timeout=5)
+    res_b = lb.result(rb, timeout=5)
+    assert res_a.tokens.tolist() == [5, 6]
+    assert res_b.tokens.tolist() == [9, 10]
+    assert res_b.token_times[0] > res_a.token_times[-1]
+    lb.shutdown()
+
+
+def test_no_block_leak_on_eos_length_eviction_and_death():
+    pool = fake_paged_pool(n_slots=4, n_blocks=3, block_size=4)
+    lb = LoadBalancer([pool])
+    # EOS eviction: prompt [5,6] -> stream 7, 8; eos=8 stops budget 6 early.
+    r_eos = lb.submit_async(theta([5, 6], 6, eos=8), tag="")
+    # Max-length eviction.
+    r_len = lb.submit_async(theta([1, 2], 3), tag="")
+    assert lb.result(r_eos, timeout=5).tokens.tolist() == [7, 8]
+    assert lb.result(r_len, timeout=5).tokens.tolist() == [3, 4, 5]
+    assert pool.block_usage() == (0, 3)
+    assert sorted(pool._free_blocks) == [1, 2, 3]
+    assert pool.n_free == pool.n_slots
+    lb.shutdown()
+
+    # Pool death mid-flight: clear() must return every leased block too.
+    pool2 = fake_paged_pool(n_slots=2, n_blocks=3, block_size=4)
+    pool2.admit(_FakeReq(theta([1, 2], 5)), now=0.0)
+    pool2.admit(_FakeReq(theta([1, 2], 2)), now=0.0)
+    assert pool2.block_usage() == (3, 3)
+    pool2.clear()
+    assert pool2.block_usage() == (0, 3)
+    assert pool2.n_free == pool2.n_slots
+
+
+class _FakeReq:
+    """Just enough of a Request for direct pool.admit() calls."""
+
+    def __init__(self, th):
+        self.theta = th
+        self.tag = ""
+
+
+def test_never_fits_raises_typed_error_and_pool_survives():
+    pool = fake_paged_pool(n_slots=2, n_blocks=3, block_size=4, max_positions=8)
+    # Direct admission: too many positions -> typed error, no lease taken.
+    with pytest.raises(PromptTooLongError):
+        pool.admit(_FakeReq(theta([1] * 6, 4)), now=0.0)  # 9 positions > 8
+    with pytest.raises(PromptTooLongError):
+        pool.admit(_FakeReq(theta([], 4)), now=0.0)  # empty prompt
+    assert pool.block_usage() == (0, 3)
+    assert pool.n_free == pool.n_slots
+    # ...and a never-fits request reports admissible so the dispatcher
+    # pops it for the typed rejection instead of parking at the head.
+    assert pool.admissible(theta([1] * 6, 4))
+
+    # Through the balancer: the request fails, the pool keeps serving.
+    lb = LoadBalancer([pool])
+    r_bad = lb.submit_async(theta([1] * 6, 4), tag="")
+    r_ok = lb.submit_async(theta([1, 2], 2), tag="")
+    with pytest.raises(PromptTooLongError):
+        lb.result(r_bad, timeout=5)
+    assert lb.result(r_ok, timeout=5).tokens.tolist() == [3, 4]
+    assert lb.telemetry.fault_count("rejected") == 1
+    lb.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Real models: the bit-identity contract of the whole PR
+# ---------------------------------------------------------------------------
+def _run_workload(variants, mode, work, **engine_kw):
+    with ServingEngine(variants, mode=mode, cache_len=24, **engine_kw) as eng:
+        gens = [eng.submit(v, p, n) for v, p, n in work]
+        tokens = [g.result(timeout=300).tokens.tolist() for g in gens]
+        summary = eng.summary()
+    return tokens, summary
+
+
+@pytest.fixture(params=REAL_ARCHS)
+def real_variants(request):
+    return {request.param: ARCHS[request.param].reduced()}
+
+
+def _mixed_work(variants, rng):
+    work = []
+    for v in variants:
+        for n_new in (4, 1, 6, 2):
+            work.append((v, rng.integers(0, 200, size=(1, 3)), n_new))
+    return work
+
+
+def test_paged_tokens_bit_identical_to_generation(real_variants):
+    rng = np.random.default_rng(0)
+    work = _mixed_work(real_variants, rng)
+    ref, _ = _run_workload(real_variants, "generation", work, n_slots=2)
+    got, summary = _run_workload(
+        real_variants, "paged", work,
+        n_slots=3, block_size=8, prefill_chunk=2,
+    )
+    assert got == ref
+    # occupancy telemetry flows for every paged pool; block occupancy only
+    # for KV families (ssm pools have no blocks to meter)
+    assert summary["slot_occupancy"]
+    (cfg,) = real_variants.values()
+    if cfg.family != "ssm":
+        assert summary["block_occupancy"]
+        occ = next(iter(summary["block_occupancy"].values()))
+        assert 0.0 < occ["mean"] <= 1.0
+
+
+def test_speculative_tokens_bit_identical_to_generation():
+    variants = {"qwen2-0.5b": ARCHS["qwen2-0.5b"].reduced()}
+    rng = np.random.default_rng(1)
+    work = _mixed_work(variants, rng)
+    ref, _ = _run_workload(variants, "generation", work, n_slots=2)
+    got, summary = _run_workload(variants, "speculative", work, spec_k=3)
+    assert got == ref
+    sp = summary["spec_accept"]["spec:qwen2-0.5b"]
+    assert sp["rounds"] > 0 and sp["drafted"] > 0
+    assert 0.0 <= sp["rate"] <= 1.0
+
+
+def test_engine_submit_validates_prompt_length():
+    variants = {"qwen2-0.5b": ARCHS["qwen2-0.5b"].reduced()}
+    with ServingEngine(variants, mode="paged", n_slots=2, cache_len=24,
+                       block_size=8) as eng:
+        # 22 prompt positions + 4 fed-back = 25 > cache_len 24
+        with pytest.raises(PromptTooLongError):
+            eng.submit("qwen2-0.5b", np.zeros((1, 22), np.int64), 4)
+        with pytest.raises(PromptTooLongError):
+            eng.submit("qwen2-0.5b", np.zeros((1, 0), np.int64), 4)
+        # the engine still serves after the rejections
+        tok = eng.submit(
+            "qwen2-0.5b", np.array([[1, 2, 3]]), 2
+        ).result(timeout=300).tokens
+        assert len(tok) == 2
